@@ -1,0 +1,64 @@
+"""Paper Figure 6: serial vs parallel simulation wall time vs core count.
+
+The paper: serial C++ grows rapidly with core count; the GPU version is
+~25x faster at 2,000 cores.  Here: serial numpy golden model vs the
+vectorized JAX simulator on the same host.  Trace length follows the paper
+(N x M references, M fixed), so work grows with core count.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core.config import SimConfig
+from repro.core.ref_serial import SerialSim
+from repro.core.sim import run
+from repro.core.trace import app_trace
+
+
+def one(rows: int, cols: int, refs: int, serial_limit: int):
+    cfg = SimConfig(rows=rows, cols=cols, addr_bits=18,
+                    centralized_directory=False)
+    tr = app_trace(cfg, "matmul", refs, seed=1)
+    n = cfg.num_nodes
+
+    run(cfg, tr, chunk=8)                 # warm the compile cache
+    t0 = time.time()
+    stats = run(cfg, tr, chunk=8)
+    t_vec = time.time() - t0
+
+    t_ser = None
+    if n <= serial_limit:
+        t0 = time.time()
+        SerialSim(cfg, tr).run()
+        t_ser = time.time() - t0
+    return {"cores": n, "cycles": stats["cycles"], "vector_s": round(t_vec, 2),
+            "serial_s": round(t_ser, 2) if t_ser else None,
+            "speedup": round(t_ser / t_vec, 1) if t_ser else None}
+
+
+def main(sizes=((4, 4), (8, 8), (16, 16), (32, 32)), refs=50,
+         serial_limit=300, out_json=None):
+    rows = []
+    print(f"{'cores':>7s} {'cycles':>8s} {'vector_s':>9s} {'serial_s':>9s} "
+          f"{'speedup':>8s}")
+    for r, c in sizes:
+        res = one(r, c, refs, serial_limit)
+        rows.append(res)
+        print(f"{res['cores']:>7d} {res['cycles']:>8d} {res['vector_s']:>9.2f} "
+              f"{res['serial_s'] if res['serial_s'] else '—':>9} "
+              f"{res['speedup'] if res['speedup'] else '—':>8}")
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--refs", type=int, default=50)
+    ap.add_argument("--serial-limit", type=int, default=300)
+    ap.add_argument("--json", default=None)
+    a = ap.parse_args()
+    main(refs=a.refs, serial_limit=a.serial_limit, out_json=a.json)

@@ -1,0 +1,46 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per benchmark plus the full
+tables.  Roofline rows come from the dry-run artifacts when present.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+
+def _timed(name, fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    dt = (time.time() - t0) * 1e6
+    print(f"CSV,{name},{dt:.0f},ok")
+    return out
+
+
+def main() -> None:
+    from benchmarks import fig6_scaling, roofline, table3_stats, table4_memory
+
+    print("== Table 3: per-application statistics ==")
+    _timed("table3_stats", table3_stats.main, 8, 8, 60,
+           "results/table3.json")
+
+    print("\n== Figure 6: serial vs vectorized scaling ==")
+    _timed("fig6_scaling", fig6_scaling.main,
+           ((4, 4), (8, 8), (16, 16)), 40, 300, "results/fig6.json")
+
+    print("\n== Table 4: cache config vs max simulated cores ==")
+    _timed("table4_memory", table4_memory.main, "results/table4.json")
+
+    print("\n== Roofline (from dry-run artifacts) ==")
+    if Path("results/dryrun").exists() and \
+            any(Path("results/dryrun").glob("*.json")):
+        _timed("roofline", roofline.main)
+    else:
+        print("(run `python -m repro.launch.dryrun --all` first)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Paper Table 4: cache configuration vs maximum simulatable core count.
+
+The paper's limit is GPU global memory (43k cores on a GTX 690, dropping
+to 30k with migration metadata, 2k with big caches).  Here: exact
+simulator-state bytes per simulated core for each cache configuration, and
+the implied maximum cores per 16 GiB TPU v5e chip and per 512-chip job.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.core.config import CacheConfig, SimConfig
+from repro.core.state import init_state
+
+CONFIGS = [
+    ("L1 128x4, L2 512x8 (paper row 1)", CacheConfig(128, 4, 32, 512, 8, 64), True),
+    ("L1 128x4, L2 128x4 (paper row 2)", CacheConfig(128, 4, 32, 128, 4, 64), True),
+    ("L1 32x2,  L2 32x2 + migration", CacheConfig(32, 2, 32, 32, 2, 64), True),
+    ("L1 32x2,  L2 32x2 no migration", CacheConfig(32, 2, 32, 32, 2, 64), False),
+]
+
+HBM = 16 * 2**30
+
+
+def bytes_per_core(cache: CacheConfig, migration: bool, refs: int = 200) -> int:
+    cfg = SimConfig(rows=4, cols=4, cache=cache, addr_bits=16,
+                    migration_enabled=migration,
+                    centralized_directory=False, dir_layout="home")
+    tr = np.zeros((cfg.num_nodes, refs), np.int32)
+    st = jax.eval_shape(lambda t: init_state(cfg, t), tr)
+    total = 0
+    for name, leaf in st._asdict().items():
+        n = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        if not migration and name in ("l2_last", "l2_streak", "fwd_tag",
+                                      "fwd_dst", "fwd_ptr"):
+            continue   # migration metadata elided (paper's "without")
+        total += n
+    return total // cfg.num_nodes
+
+
+def main(out_json=None):
+    rows = []
+    print(f"{'config':38s} {'B/core':>8s} {'max cores/chip':>15s} "
+          f"{'max cores/512':>14s}")
+    for name, cache, mig in CONFIGS:
+        b = bytes_per_core(cache, mig)
+        per_chip = HBM // b
+        rows.append({"config": name, "bytes_per_core": b,
+                     "max_per_chip": per_chip,
+                     "max_512": per_chip * 512})
+        print(f"{name:38s} {b:>8d} {per_chip:>15,d} {per_chip*512:>14,d}")
+    print("\npaper (GTX 690, 2 GiB/GPU): 2,000 / 10,000 / 30,000 / 43,000")
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None)
+    main(ap.parse_args().json)

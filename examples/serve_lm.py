@@ -1,0 +1,36 @@
+"""Serve a small LM with batched requests (continuous batching).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.models import api
+from repro.serve.server import Request, Server
+
+
+def main() -> None:
+    cfg = registry.reduced("tinyllama-1.1b")
+    params = api.init_params(cfg, jax.random.key(0))
+    server = Server(cfg, params, slots=4, cache_len=128, temperature=0.0)
+
+    rng = np.random.default_rng(0)
+    for rid in range(10):
+        prompt = rng.integers(0, cfg.vocab, size=rng.integers(2, 8)
+                              ).astype(np.int32)
+        server.submit(Request(rid=rid, prompt=prompt, max_new=12))
+
+    finished = server.run_until_drained()
+    assert len(finished) == 10, len(finished)
+    for req in finished:
+        print(f"req {req.rid}: prompt {req.prompt.tolist()} -> {req.out}")
+    print(f"served {len(finished)} requests with continuous batching")
+
+
+if __name__ == "__main__":
+    main()

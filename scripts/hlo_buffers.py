@@ -1,0 +1,60 @@
+"""Dev tool: print the largest tensors in a cell's optimized HLO."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re
+import sys
+from collections import Counter
+
+sys.path.insert(0, "src")
+
+SHAPE = re.compile(r"%?([\w\.\-]+) = ([a-z0-9]+)\[([0-9,]*)\]")
+BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+         "u16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "f64": 8}
+
+
+def main(arch, shape, mesh):
+    from repro.launch.dryrun import run_cell
+    import repro.launch.dryrun as dr
+    # monkeypatch to capture hlo
+    import repro.launch.dryrun as d
+
+    # rebuild the cell manually to get compiled text
+    from repro.configs import registry
+    from repro.configs.shapes import SHAPES
+    old = d.lm_cell
+
+    captured = {}
+    orig_collect = d.collective_bytes
+    def spy(text):
+        captured["hlo"] = text
+        return orig_collect(text)
+    d.collective_bytes = spy
+    res = run_cell(arch, shape, mesh)
+    text = captured.get("hlo", "")
+    sizes = []
+    for m in SHAPE.finditer(text):
+        name, dt, dims = m.groups()
+        if dt not in BYTES:
+            continue
+        n = 1
+        for x in dims.split(","):
+            if x:
+                n *= int(x)
+        sizes.append((n * BYTES[dt], f"{dt}[{dims}]", name.split(".")[0]))
+    sizes.sort(reverse=True)
+    seen = Counter()
+    print("== top tensors ==")
+    shown = 0
+    for b, shp, name in sizes:
+        key = (shp, name)
+        seen[key] += 1
+        if seen[key] > 1:
+            continue
+        print(f"{b/2**30:8.2f} GiB  {shp:40s} {name}")
+        shown += 1
+        if shown >= 25:
+            break
+
+
+if __name__ == "__main__":
+    main(sys.argv[1], sys.argv[2], sys.argv[3] if len(sys.argv) > 3 else "single")

@@ -1,0 +1,56 @@
+"""Dev harness: run every reduced arch through forward/loss/decode on CPU."""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.models import api
+from repro.models.config import ModelConfig
+
+
+def check(arch_id: str) -> None:
+    cfg = registry.reduced(arch_id)
+    rng = np.random.default_rng(0)
+    params = api.init_params(cfg, jax.random.key(0))
+    nleaves = len(jax.tree.leaves(params))
+
+    batch = api.make_inputs(cfg, "train", 2, 32, rng)
+    loss = jax.jit(lambda p, b: api.loss_fn(cfg, p, b))(params, batch)
+    assert jnp.isfinite(loss), (arch_id, loss)
+
+    # grad step sanity
+    g = jax.jit(jax.grad(lambda p: api.loss_fn(cfg, p, batch)))(params)
+    gn = jax.tree.reduce(lambda a, b: a + b,
+                         jax.tree.map(lambda x: jnp.sum(jnp.abs(x.astype(jnp.float32))), g))
+    assert jnp.isfinite(gn) and gn > 0, (arch_id, gn)
+
+    # decode step
+    cache = api.init_cache(cfg, 2, 64)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab, (2, 1)), jnp.int32)
+    logits, cache2 = jax.jit(
+        lambda p, c, t: api.decode_step(cfg, p, c, t))(params, cache, tok)
+    assert logits.shape == (2, cfg.vocab), (arch_id, logits.shape)
+    assert jnp.all(jnp.isfinite(logits.astype(jnp.float32))), arch_id
+    # second step advances the index
+    logits2, cache3 = jax.jit(
+        lambda p, c, t: api.decode_step(cfg, p, c, t))(params, cache2, tok)
+    assert int(cache3["idx"]) == 2, (arch_id, int(cache3["idx"]))
+
+    full = registry.get(arch_id)
+    print(f"OK {arch_id:24s} loss={float(loss):8.4f} leaves={nleaves:3d} "
+          f"N={full.n_params()/1e9:6.2f}B active={full.n_active_params()/1e9:6.2f}B")
+
+
+if __name__ == "__main__":
+    ids = sys.argv[1:] or registry.ARCH_IDS
+    for a in ids:
+        try:
+            check(a)
+        except Exception as e:
+            import traceback
+            print(f"FAIL {a}: {type(e).__name__}: {e}")
+            traceback.print_exc(limit=8)

@@ -1,0 +1,145 @@
+"""Configuration for the bufferless-NoC LCMP simulator.
+
+Semantics are shared verbatim by the serial golden model
+(:mod:`repro.core.ref_serial`) and the vectorized JAX simulator
+(:mod:`repro.core.sim`): this module is the single source of truth for
+message types, packet lengths (paper Table 1) and latency/geometry knobs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+# ---------------------------------------------------------------------------
+# Message types (paper Table 1 + control messages implied by §3.3/§3.4).
+# Values are stable: they appear inside int8/int32 device arrays.
+# ---------------------------------------------------------------------------
+MSG_REQ = 0       # remote L2 read request                        (1 flit)
+MSG_RA = 1        # data reply carrying one L1 block              (4 flits)
+MSG_NACK = 2      # trap reply: block not found at owner          (1 flit)
+MSG_DA = 3        # directory lookup request                      (1 flit)
+MSG_DR = 4        # directory reply (payload: owner or -1)        (1 flit)
+MSG_DU = 5        # directory update (payload: owner or -1=del)   (1 flit)
+MSG_WB = 6        # L1 victim write-back to its L2 home           (4 flits)
+MSG_B2 = 7        # L2 block migration / replacement transfer     (16 flits)
+MSG_MIG_ACK = 8   # migration installed at destination            (1 flit)
+MSG_REQ_FWD = 9   # redirected request (paper's RR)               (1 flit)
+
+NUM_MSG_TYPES = 10
+
+#: packet length in flits, indexed by message type (paper Table 1: DA=1,
+#: DR=1, RR=1, RA=4, B2=16; WB carries an L1 block like RA).
+FLITS_OF = (1, 4, 1, 1, 1, 1, 4, 16, 1, 1)
+
+# FSM states of a core (phase 1).
+ST_IDLE = 0       # ready to consume the next trace address
+ST_L1_WAIT = 1    # counting down the L1 miss penalty
+ST_L2_WAIT = 2    # counting down the local-L2 hit latency
+ST_WAIT_DIR = 3   # DA sent, waiting for DR
+ST_WAIT_DATA = 4  # REQ sent to owner, waiting for RA / NACK
+ST_WAIT_MEM = 5   # counting down the off-chip memory latency
+ST_DONE = 6       # trace exhausted (keeps routing + serving remote requests)
+
+# Port indices. The "directions" of a 2-D mesh router; EJECT/INJECT are
+# virtual ports used only during arbitration.
+PORT_N, PORT_E, PORT_S, PORT_W = 0, 1, 2, 3
+NUM_PORTS = 4
+EJECT = 4
+INJECT_SLOT = 4   # index of the injection candidate in the arbitration list
+
+# Memory-install targets (trap path installs to L1 only — DESIGN.md §2).
+INSTALL_L2 = 0
+INSTALL_L1_ONLY = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """Geometry of the per-node caches (paper Table 4 rows)."""
+
+    l1_sets: int = 32
+    l1_ways: int = 2
+    l1_block: int = 32          # bytes (paper: 32B L1 lines)
+    l2_sets: int = 32
+    l2_ways: int = 2
+    l2_block: int = 64          # bytes (paper: 64B L2 lines)
+
+    @property
+    def l1_shift(self) -> int:
+        return self.l1_block.bit_length() - 1
+
+    @property
+    def l2_shift(self) -> int:
+        return self.l2_block.bit_length() - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Full simulator configuration.
+
+    ``rows`` × ``cols`` is the simulated mesh; every other field mirrors a
+    knob of the paper's simulator (§3, §6).
+    """
+
+    rows: int = 8
+    cols: int = 8
+    cache: CacheConfig = dataclasses.field(default_factory=CacheConfig)
+
+    # Latencies (cycles).
+    l1_miss_cycles: int = 2     # paper §7.1.1 "wait up to L1 miss cycle"
+    l2_hit_cycles: int = 4
+    mem_cycles: int = 80        # off-chip fetch (no flits routed — DESIGN §2)
+
+    # Address space of the simulated machine. Directory ("location array",
+    # paper §6.2.2) has 2**addr_bits / l2_block entries.
+    addr_bits: int = 20
+
+    # LSPD management.
+    migration_enabled: bool = True
+    migrate_threshold: int = 3  # consecutive remote hits by the same node
+    fwd_entries: int = 4        # per-node forwarding table (redirection)
+    centralized_directory: bool = True   # paper default; False = tag-home
+
+    # Node plumbing.
+    rob_slots: int = 8          # reorder-buffer packet slots per node
+    send_queue: int = 64        # outbound flit-queue depth per node
+    max_cycles: int = 200_000
+
+    # Simulator implementation knobs (do not change semantics).
+    flit_dtype: str = "int32"
+    dir_layout: str = "flat"   # "flat" | "home" (home = sharded with nodes)
+    use_pallas_router: bool = False   # Phase-2 arbitration via Pallas kernel
+
+    @property
+    def num_nodes(self) -> int:
+        return self.rows * self.cols
+
+    @property
+    def dir_entries(self) -> int:
+        return (1 << self.addr_bits) >> self.cache.l2_shift
+
+    def dir_home(self, tag: int) -> int:
+        """Node id owning the directory entry for ``tag``."""
+        if self.centralized_directory:
+            return 0
+        return tag % self.num_nodes
+
+    def validate(self) -> None:
+        assert self.rows >= 2 and self.cols >= 2, "mesh must be at least 2x2"
+        assert self.cache.l2_block % self.cache.l1_block == 0
+        assert self.migrate_threshold >= 1
+        assert self.rob_slots >= 2
+
+
+# Paper presets -------------------------------------------------------------
+
+def paper_small() -> SimConfig:
+    """Table 4 row 3/4 cache geometry (32,2,32 / 32,2,32)."""
+    return SimConfig(cache=CacheConfig(32, 2, 32, 32, 2, 32 * 2))
+
+
+def paper_large_cache() -> SimConfig:
+    """Table 4 row 1 geometry (L1 128,4,32; L2 512,8,64)."""
+    return SimConfig(cache=CacheConfig(128, 4, 32, 512, 8, 64))
+
+
+APP_NAMES = ("matmul", "apsi", "mgrid", "wupwise", "equake")

@@ -1,0 +1,197 @@
+"""Vectorized phases 2 & 3: bufferless deflection routing (paper §4, §6.2.1).
+
+Phase 2 (arbitration): per router — eject the oldest deliverable flit (S11),
+optionally admit an injection flit (S12), then assign output ports in
+age-priority order with PMDR preference lists (S9), deflecting losers.
+The per-router age sort is a branch-free greedy loop over 5 candidate slots
+evaluated for all routers at once (the TPU-native form of the paper's
+"Priority Sort" block, Fig. 3).
+
+Phase 3 (transfer): a pure gather — input port p of node n reads the
+opposite output port of its neighbour in direction p.  This gather is the
+only cross-node dataflow in the whole simulator; the sharded version
+replaces it with a tile-local shift + ``ppermute`` halo exchange
+(:mod:`repro.core.sharded`), sharing `deliver` for the ROB/completion step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+from .config import NUM_PORTS, SimConfig
+from .state import (
+    F_AGE, F_DST, F_FID, F_NFL, F_OSRC, F_PKT, F_SRC, F_TAG, F_TYP, F_VALID,
+    NUM_F, Q_DST, Q_NFL, Q_OSRC, Q_PKT, Q_TAG, Q_TYP,
+    R_CNT, R_NFL, R_OSRC, R_PKT, R_SRC, R_TAG, R_TYP,
+    P_OSRC, P_SRC, P_TAG, P_TYP, P_VALID,
+    Geometry, NodeCtx, SimState, bump,
+)
+
+I32 = jnp.int32
+
+
+class ArbResult(NamedTuple):
+    out: jnp.ndarray        # (Nl, 4, NUM_F) outgoing flits (age already bumped)
+    ej_port: jnp.ndarray    # (Nl,)
+    has_ej: jnp.ndarray     # (Nl,) bool
+    n_deflected: jnp.ndarray
+    n_injected: jnp.ndarray
+
+
+def rob_accepts(s: SimState, flits: jnp.ndarray) -> jnp.ndarray:
+    """S10 vectorized: (Nl, P) bool — can each flit be ejected into the ROB."""
+    nfl = flits[..., F_NFL]
+    src = flits[..., F_SRC]
+    pkt = flits[..., F_PKT]
+    rob_valid = s.rob[:, :, R_NFL] > 0                      # (Nl, K)
+    m = (rob_valid[:, None, :]
+         & (s.rob[:, None, :, R_SRC] == src[:, :, None])
+         & (s.rob[:, None, :, R_PKT] == pkt[:, :, None]))   # (Nl, P, K)
+    has_match = jnp.any(m, axis=-1)
+    has_free = jnp.any(~rob_valid, axis=-1)
+    return (nfl == 1) | has_match | has_free[:, None]
+
+
+def phase2(s: SimState, cfg: SimConfig, ctx: NodeCtx) -> Tuple[SimState, ArbResult]:
+    n = ctx.node_id.shape[0]
+    node = jnp.arange(n, dtype=I32)
+    nid = ctx.node_id
+    vp = ctx.valid_port
+    r = ctx.node_r
+    c = ctx.node_c
+
+    inp = s.inp
+    valid_in = inp[:, :, F_VALID] > 0
+
+    # ---- ejection (S11): oldest (age desc, port asc) deliverable flit;
+    #      S14: paused while the pending-completion register is occupied ----
+    acc = rob_accepts(s, inp)
+    pc_free = (s.pc[:, P_VALID] == 0)
+    want_ej = (valid_in & (inp[:, :, F_DST] == nid[:, None]) & acc
+               & pc_free[:, None])
+    ej_key = jnp.where(want_ej,
+                       inp[:, :, F_AGE] * 4 + (3 - jnp.arange(4, dtype=I32)),
+                       -1)
+    ej_port = jnp.argmax(ej_key, axis=1).astype(I32)
+    has_ej = jnp.max(ej_key, axis=1) >= 0
+    is_ej = (jnp.arange(4, dtype=I32)[None, :] == ej_port[:, None]) & has_ej[:, None]
+    remaining = valid_in & ~is_ej
+
+    # ---- injection (S12) ----
+    n_rem = jnp.sum(remaining.astype(I32), axis=1)
+    n_vp = jnp.sum(vp.astype(I32), axis=1)
+    qp = cfg.send_queue
+    head = s.q_desc[node, s.q_head % qp]                     # (Nl, 6)
+    can_inj = (s.q_size > 0) & (n_rem < n_vp)
+    inj = jnp.stack([
+        can_inj.astype(I32), jnp.zeros(n, I32), nid, head[:, Q_DST],
+        head[:, Q_OSRC], head[:, Q_TYP], head[:, Q_TAG], head[:, Q_PKT],
+        s.q_fid, head[:, Q_NFL],
+    ], axis=-1)
+
+    cand = jnp.concatenate(
+        [jnp.where(remaining[:, :, None], inp, 0), inj[:, None, :]], axis=1)
+    cand_valid = cand[:, :, F_VALID] > 0                     # (Nl, 5)
+
+    # ---- age-priority arbitration (paper Fig. 3 "Priority Sort" + port
+    #      selection) — shared oracle / Pallas kernel, see repro.kernels ----
+    from repro.kernels import ops as kops
+    dst = cand[:, :, F_DST]
+    dst_r = jnp.where(dst >= 0, dst // cfg.cols, 0)
+    dst_c = jnp.where(dst >= 0, dst % cfg.cols, 0)
+    dr_ = dst_r - r[:, None]
+    dc_ = dst_c - c[:, None]
+    ports = jnp.arange(4, dtype=I32)
+    wanted_eject = cand_valid & (dst == nid[:, None])
+    assigned, deflect = kops.arbitrate(
+        cand[:, :, F_AGE], cand_valid, wanted_eject, dc_, dr_, vp,
+        backend="pallas" if getattr(cfg, "use_pallas_router", False) else "ref")
+
+    # ---- scatter candidates to their output ports (ports are distinct) ----
+    new_age = cand[:, :, F_AGE] + deflect.astype(I32)
+    cand = cand.at[:, :, F_AGE].set(new_age)
+    oh = ((assigned[:, :, None] == ports[None, None, :])
+          & cand_valid[:, :, None])                          # (Nl, 5, 4)
+    out = jnp.einsum("nsp,nsf->npf", oh.astype(I32), cand)
+    out = out.at[:, :, F_VALID].set(jnp.any(oh, axis=1).astype(I32))
+
+    # ---- pop the send queue on injection ----
+    injected = can_inj
+    q_fid = s.q_fid + injected.astype(I32)
+    pkt_done = injected & (q_fid >= head[:, Q_NFL])
+    q_head = jnp.where(pkt_done, (s.q_head + 1) % qp, s.q_head)
+    q_size = jnp.where(pkt_done, s.q_size - 1, s.q_size)
+    q_fid = jnp.where(pkt_done, 0, q_fid)
+
+    stats = bump(s.stats, "injected", injected)
+    n_defl = jnp.sum((deflect & cand_valid).astype(I32))
+    stats = bump(stats, "deflections", n_defl)
+    s = s._replace(q_head=q_head, q_size=q_size, q_fid=q_fid, stats=stats)
+    return s, ArbResult(out, ej_port, has_ej, n_defl, jnp.sum(injected.astype(I32)))
+
+
+def transfer_global(cfg: SimConfig, geo: Geometry, out: jnp.ndarray) -> jnp.ndarray:
+    """Single-device phase-3 transfer: global neighbour gather."""
+    vp = jnp.asarray(geo.valid_port)
+    gn = jnp.asarray(geo.gather_node)                        # (N, 4)
+    gp = jnp.asarray(geo.gather_port)                        # (4,)
+    moved = out[gn, gp[None, :]]                             # (N, 4, F)
+    return jnp.where(vp[:, :, None], moved, 0)
+
+
+def deliver(s: SimState, cfg: SimConfig, ctx: NodeCtx, arb: ArbResult,
+            inp_next: jnp.ndarray) -> SimState:
+    """Shared phase-3 tail: hop stats, ejection into ROB, completions."""
+    n = ctx.node_id.shape[0]
+    node = jnp.arange(n, dtype=I32)
+
+    stats = bump(s.stats, "hops", arb.out[:, :, F_VALID])
+
+    # ---- ejection into ROB / pending register ----
+    f = s.inp[node, arb.ej_port]                             # (Nl, F) pre-arb flit
+    he = arb.has_ej
+    stats = bump(stats, "flits_delivered", he)
+    single = he & (f[:, F_NFL] == 1)
+    multi = he & (f[:, F_NFL] > 1)
+
+    rob = s.rob
+    rob_valid = rob[:, :, R_NFL] > 0
+    m = (rob_valid & (rob[:, :, R_SRC] == f[:, None, F_SRC])
+         & (rob[:, :, R_PKT] == f[:, None, F_PKT]))          # (Nl, K)
+    has_match = jnp.any(m, axis=1)
+    match_idx = jnp.argmax(m, axis=1).astype(I32)
+    free_idx = jnp.argmax(~rob_valid, axis=1).astype(I32)
+    slot = jnp.where(has_match, match_idx, free_idx)
+    newslot = multi & ~has_match
+    init_row = jnp.stack([f[:, F_SRC], f[:, F_PKT], f[:, F_TYP], f[:, F_TAG],
+                          f[:, F_OSRC], f[:, F_NFL], jnp.zeros(n, I32)], axis=-1)
+    cur = rob[node, slot]
+    row = jnp.where(newslot[:, None], init_row, cur)
+    cnt = row[:, R_CNT] + multi.astype(I32)
+    row = row.at[:, R_CNT].set(cnt)
+    complete_m = multi & (cnt >= row[:, R_NFL])
+    # a completed slot is freed (zeroed)
+    full_row = jnp.where(newslot[:, None], init_row, cur)
+    full_row = full_row.at[:, R_CNT].set(cnt)
+    row = jnp.where(complete_m[:, None], 0, row)
+    rob = rob.at[node, slot].set(jnp.where(multi[:, None], row, cur))
+
+    pc_valid = single | complete_m
+    pc = jnp.stack([
+        pc_valid.astype(I32),
+        jnp.where(single, f[:, F_TYP], full_row[:, R_TYP]),
+        jnp.where(single, f[:, F_SRC], full_row[:, R_SRC]),
+        jnp.where(single, f[:, F_OSRC], full_row[:, R_OSRC]),
+        jnp.where(single, f[:, F_TAG], full_row[:, R_TAG]),
+    ], axis=-1)
+    pc = pc * pc_valid[:, None].astype(I32)
+    # S14: preserve an occupied register (its node was barred from ejecting)
+    pc = jnp.where(pc_valid[:, None], pc, s.pc)
+
+    return s._replace(inp=inp_next, rob=rob, pc=pc, stats=stats)
+
+
+def phase3(s: SimState, cfg: SimConfig, geo: Geometry, ctx: NodeCtx,
+           arb: ArbResult) -> SimState:
+    return deliver(s, cfg, ctx, arb, transfer_global(cfg, geo, arb.out))

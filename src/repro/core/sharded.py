@@ -1,0 +1,238 @@
+"""Multi-device NoC simulation: 2-D spatial domain decomposition (DESIGN §5).
+
+The simulated router grid (R, C) is block-partitioned over the TPU device
+mesh: rows over ``row_axes`` (e.g. ``("pod", "data")``), columns over
+``col_axes`` (e.g. ``("model",)``).  Every phase is node-local except the
+phase-3 flit transfer, whose cross-tile edges become four ``ppermute`` halo
+slabs per cycle — the simulated 2-D mesh maps onto the physical 2-D ICI
+torus, so halo traffic is near-neighbour on the real interconnect.
+
+The directory must be distributed (``dir_layout="home"``): entry(tag) lives
+at node ``tag % N`` which is the only node that ever touches it, so the
+location array shards exactly like the nodes and directory traffic rides
+the simulated network itself (no extra collectives).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .cache import phase1a, phase1b
+from .config import ST_DONE, SimConfig
+from .noc import deliver, phase2
+from .ref_serial import STAT_NAMES
+from .state import (
+    F_VALID,
+    NUM_F,
+    NodeCtx,
+    SimState,
+    init_state,
+    make_geometry,
+)
+
+I32 = jnp.int32
+
+#: leaves whose leading dim is the node dim (reshaped (N, …) -> (R, C, …))
+_NODE_LEAVES = {
+    "st", "ctr", "tr_ptr", "pend_addr", "install_mode", "pkt_ctr",
+    "lru_clock", "l1_tag", "l1_lru", "l1_owner", "l2_tag", "l2_lru",
+    "l2_mig", "l2_last", "l2_streak", "dir_loc", "fwd_tag", "fwd_dst",
+    "fwd_ptr", "inp", "q_desc", "q_head", "q_size", "q_fid", "rob", "pc",
+    "trace",
+}
+_REPL_LEAVES = {"stats", "cycle"}
+
+
+def to_grid(s: SimState, cfg: SimConfig) -> SimState:
+    """Reshape node-major leaves (N, …) -> (R, C, …)."""
+    def rs(name, x):
+        if name in _NODE_LEAVES:
+            return x.reshape((cfg.rows, cfg.cols) + x.shape[1:])
+        return x
+    return SimState(**{k: rs(k, v) for k, v in s._asdict().items()})
+
+
+def state_specs(cfg: SimConfig, row_axes, col_axes) -> SimState:
+    d = {}
+    for k in SimState._fields:
+        d[k] = P(row_axes, col_axes) if k in _NODE_LEAVES else P()
+    return SimState(**d)
+
+
+def _halo_transfer(out4: jnp.ndarray, vp4: jnp.ndarray,
+                   row_axes, col_axes) -> jnp.ndarray:
+    """Phase-3 transfer for one (Rt, Ct, 4, F) tile with ppermute halos."""
+    nrow = jax.lax.axis_size(row_axes)
+    ncol = jax.lax.axis_size(col_axes)
+    perm_dn = [(i, (i + 1) % nrow) for i in range(nrow)]
+    perm_up = [(i, (i - 1) % nrow) for i in range(nrow)]
+    perm_rt = [(i, (i + 1) % ncol) for i in range(ncol)]
+    perm_lt = [(i, (i - 1) % ncol) for i in range(ncol)]
+
+    # input N (p=0) <- neighbour-above's output S (p=2)
+    from_above = jax.lax.ppermute(out4[-1:, :, 2], row_axes, perm_dn)
+    in_n = jnp.concatenate([from_above, out4[:-1, :, 2]], axis=0)
+    # input S (p=2) <- neighbour-below's output N (p=0)
+    from_below = jax.lax.ppermute(out4[:1, :, 0], row_axes, perm_up)
+    in_s = jnp.concatenate([out4[1:, :, 0], from_below], axis=0)
+    # input W (p=3) <- left neighbour's output E (p=1)
+    from_left = jax.lax.ppermute(out4[:, -1:, 1], col_axes, perm_rt)
+    in_w = jnp.concatenate([from_left, out4[:, :-1, 1]], axis=1)
+    # input E (p=1) <- right neighbour's output W (p=3)
+    from_right = jax.lax.ppermute(out4[:, :1, 3], col_axes, perm_lt)
+    in_e = jnp.concatenate([out4[:, 1:, 3], from_right], axis=1)
+
+    inp = jnp.stack([in_n, in_e, in_s, in_w], axis=2)   # (Rt, Ct, 4, F)
+    # global mesh edges have no links: the valid-port mask kills wraparound
+    return jnp.where(vp4[:, :, :, None], inp, 0)
+
+
+def _flatten_nodes(x: jnp.ndarray) -> jnp.ndarray:
+    return x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:])
+
+
+def make_sharded_step(cfg: SimConfig, mesh,
+                      row_axes: Tuple[str, ...] = ("data",),
+                      col_axes: Tuple[str, ...] = ("model",)):
+    """Returns ``build(n_cycles)`` -> jitted sharded step advancing the sim
+    by ``n_cycles`` cycles (a no-op once globally finished)."""
+    assert not cfg.centralized_directory and cfg.dir_layout == "home", \
+        "sharded simulation requires the distributed, home-sharded directory"
+    sspec = state_specs(cfg, row_axes, col_axes)
+    gspec = (P(row_axes, col_axes), P(row_axes, col_axes),
+             P(row_axes, col_axes), P(row_axes, col_axes))
+    all_axes = tuple(row_axes) + tuple(col_axes)
+
+    def tile_finished(s) -> jnp.ndarray:
+        done = jnp.all(s.st == ST_DONE)
+        net = ~jnp.any(s.inp[..., F_VALID] > 0)
+        q = jnp.all(s.q_size == 0)
+        rob = jnp.all(s.rob[..., 5] == 0)
+        pc = jnp.all(s.pc[..., 0] == 0)
+        return done & net & q & rob & pc
+
+    def one_cycle(flat: SimState, ctx: NodeCtx, rt: int, ct: int) -> SimState:
+        s = phase1a(flat, cfg, ctx)
+        s = phase1b(s, cfg, ctx)
+        s, arb = phase2(s, cfg, ctx)
+        out4 = arb.out.reshape(rt, ct, 4, NUM_F)
+        vp4 = ctx.valid_port.reshape(rt, ct, 4)
+        inp_next = _halo_transfer(out4, vp4, row_axes, col_axes)
+        s = deliver(s, cfg, ctx, arb, inp_next.reshape(rt * ct, 4, NUM_F))
+        return s._replace(cycle=s.cycle + 1)
+
+    def step_tile(n_cycles: int, s2d: SimState, nid2, nr2, nc2, vp2):
+        rt, ct = s2d.st.shape
+        ctx = NodeCtx(_flatten_nodes(nid2), _flatten_nodes(nr2),
+                      _flatten_nodes(nc2), _flatten_nodes(vp2))
+
+        def flat_of(s):  # (Rt, Ct, …) -> (Nl, …) for node leaves
+            return SimState(**{
+                k: (_flatten_nodes(v) if k in _NODE_LEAVES else v)
+                for k, v in s._asdict().items()})
+
+        def grid_of(s):
+            return SimState(**{
+                k: (v.reshape((rt, ct) + v.shape[1:]) if k in _NODE_LEAVES
+                    else v)
+                for k, v in s._asdict().items()})
+
+        flat = flat_of(s2d)
+        in_stats = flat.stats
+        # stats start replicated but accumulate device-local sums inside the
+        # scan; mark them varying for the carry (re-replicated via psum below)
+        flat = flat._replace(
+            stats=jax.lax.pcast(flat.stats, all_axes, to="varying"))
+
+        ndev = jax.lax.psum(jnp.ones((), I32), all_axes)
+
+        def body(carry, _):
+            fin_local = tile_finished(carry)
+            fin = jax.lax.psum(fin_local.astype(I32), all_axes) == ndev
+            nxt = one_cycle(carry, ctx, rt, ct)
+            out = jax.tree.map(lambda a, b: jnp.where(fin, a, b), carry, nxt)
+            return out, ()
+
+        flat, _ = jax.lax.scan(body, flat, None, length=n_cycles)
+        # stats: replicate via psum of the local delta
+        delta = flat.stats - in_stats
+        flat = flat._replace(stats=in_stats + jax.lax.psum(delta, all_axes))
+        return grid_of(flat)
+
+    cache = {}
+
+    def build(n_cycles: int):
+        if n_cycles not in cache:
+            smapped = jax.shard_map(
+                functools.partial(step_tile, n_cycles),
+                mesh=mesh,
+                in_specs=(sspec,) + gspec,
+                out_specs=sspec,
+            )
+            cache[n_cycles] = jax.jit(smapped)
+        return cache[n_cycles]
+
+    return build
+
+
+def make_geo_arrays(cfg: SimConfig, mesh, row_axes=("data",),
+                    col_axes=("model",)):
+    """Global geometry arrays, laid out (R, C, …) and device_put sharded."""
+    geo = make_geometry(cfg.rows, cfg.cols)
+    n, c = cfg.num_nodes, cfg.cols
+    nid = np.arange(n, dtype=np.int32).reshape(cfg.rows, cfg.cols)
+    nr = np.asarray(geo.node_r).reshape(cfg.rows, cfg.cols)
+    nc = np.asarray(geo.node_c).reshape(cfg.rows, cfg.cols)
+    vp = np.asarray(geo.valid_port).reshape(cfg.rows, cfg.cols, 4)
+    sh = NamedSharding(mesh, P(row_axes, col_axes))
+    return (jax.device_put(nid, sh), jax.device_put(nr, sh),
+            jax.device_put(nc, sh), jax.device_put(vp, sh))
+
+
+class ShardedSim:
+    """Driver: host-chunked sharded simulation with global termination."""
+
+    def __init__(self, cfg: SimConfig, trace: np.ndarray, mesh,
+                 row_axes: Tuple[str, ...] = ("data",),
+                 col_axes: Tuple[str, ...] = ("model",)):
+        nrow = int(np.prod([mesh.shape[a] for a in row_axes]))
+        ncol = int(np.prod([mesh.shape[a] for a in col_axes]))
+        assert cfg.rows % nrow == 0 and cfg.cols % ncol == 0, \
+            f"mesh {cfg.rows}x{cfg.cols} not divisible by tiles {nrow}x{ncol}"
+        self.cfg = cfg
+        self.mesh = mesh
+        s = to_grid(init_state(cfg, trace), cfg)
+        specs = state_specs(cfg, row_axes, col_axes)
+        self.state = jax.device_put(
+            s, jax.tree.map(lambda p: NamedSharding(mesh, p), specs,
+                            is_leaf=lambda x: isinstance(x, P)))
+        self.geo = make_geo_arrays(cfg, mesh, row_axes, col_axes)
+        self.build_step = make_sharded_step(cfg, mesh, row_axes, col_axes)
+        self._finished = jax.jit(self._finished_fn)
+
+    @staticmethod
+    def _finished_fn(s: SimState) -> jnp.ndarray:
+        done = jnp.all(s.st == ST_DONE)
+        net = ~jnp.any(s.inp[..., F_VALID] > 0)
+        q = jnp.all(s.q_size == 0)
+        rob = jnp.all(s.rob[..., 5] == 0)
+        pc = jnp.all(s.pc[..., 0] == 0)
+        return done & net & q & rob & pc
+
+    def run(self, max_cycles=None, chunk: int = 256):
+        limit = max_cycles or self.cfg.max_cycles
+        step = self.build_step(chunk)
+        while int(self.state.cycle) < limit:
+            self.state = step(self.state, *self.geo)
+            if bool(self._finished(self.state)):
+                break
+        stats = np.asarray(self.state.stats)
+        out = {k: int(v) for k, v in zip(STAT_NAMES, stats)}
+        out["cycles"] = int(self.state.cycle)
+        out["finished"] = int(bool(self._finished(self.state)))
+        return out

@@ -1,0 +1,115 @@
+"""Vectorized simulator driver: the paper's main loop (§7.1/§7.2) in JAX.
+
+The serial version's
+
+    while not finished: Phase1(all); Phase2(all); Phase3(all)
+
+and the GPU version's three-kernel loop both become a single jitted
+``cycle_step`` (phases fused by XLA) inside ``lax.while_loop`` — the
+CUDA grid barrier between kernels is simply the dataflow between phases.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ST_DONE, SimConfig
+from .cache import phase1a, phase1b
+from .noc import phase2, phase3
+from .ref_serial import STAT_NAMES
+from .state import (F_VALID, Geometry, NodeCtx, SimState, init_state,
+                    make_geometry, make_node_ctx)
+
+__all__ = ["cycle_step", "finished", "run", "VectorSim"]
+
+
+def cycle_step(s: SimState, cfg: SimConfig, geo: Geometry,
+               ctx: NodeCtx) -> SimState:
+    """One simulated cycle = phases 1a, 1b, 2, 3 (S1)."""
+    s = phase1a(s, cfg, ctx)
+    s = phase1b(s, cfg, ctx)
+    s, arb = phase2(s, cfg, ctx)
+    s = phase3(s, cfg, geo, ctx, arb)
+    return s._replace(cycle=s.cycle + 1)
+
+
+def finished(s: SimState) -> jnp.ndarray:
+    done = jnp.all(s.st == ST_DONE)
+    net_empty = ~jnp.any(s.inp[:, :, F_VALID] > 0)
+    q_empty = jnp.all(s.q_size == 0)
+    rob_empty = jnp.all(s.rob[:, :, 5] == 0)   # R_NFL
+    pc_empty = jnp.all(s.pc[:, 0] == 0)
+    return done & net_empty & q_empty & rob_empty & pc_empty
+
+
+@functools.partial(jax.jit, static_argnums=(1, 3))
+def _run_jit(s: SimState, cfg: SimConfig, max_cycles: jnp.ndarray,
+             chunk: int) -> SimState:
+    def cond(st):
+        return (~finished(st)) & (st.cycle < max_cycles)
+
+    geo = make_geometry(cfg.rows, cfg.cols)
+    ctx = make_node_ctx(cfg)
+
+    def body(st):
+        return cycle_step(st, cfg, geo, ctx)
+
+    if chunk <= 1:
+        return jax.lax.while_loop(cond, body, s)
+
+    # chunked: run `chunk` cycles per termination check (fewer host syncs,
+    # and the inner scan unrolls into a tighter compiled loop)
+    def chunk_body(st):
+        def scan_fn(carry, _):
+            nxt = jax.lax.cond(cond(carry), body, lambda x: x, carry)
+            return nxt, ()
+        st, _ = jax.lax.scan(scan_fn, st, None, length=chunk)
+        return st
+
+    return jax.lax.while_loop(cond, chunk_body, s)
+
+
+def run(cfg: SimConfig, trace: np.ndarray, max_cycles: Optional[int] = None,
+        chunk: int = 1) -> Dict[str, int]:
+    """Run the vectorized simulator to completion; returns statistics."""
+    s = init_state(cfg, trace)
+    s = _run_jit(s, cfg, jnp.asarray(max_cycles or cfg.max_cycles, jnp.int32),
+                 chunk)
+    stats = np.asarray(s.stats)
+    out = {k: int(v) for k, v in zip(STAT_NAMES, stats)}
+    out["cycles"] = int(s.cycle)
+    out["finished"] = int(bool(finished(s)))
+    return out
+
+
+class VectorSim:
+    """Step-at-a-time wrapper (used by the equivalence tests to compare
+    against :class:`repro.core.ref_serial.SerialSim` cycle by cycle)."""
+
+    def __init__(self, cfg: SimConfig, trace: np.ndarray):
+        self.cfg = cfg
+        self.geo = make_geometry(cfg.rows, cfg.cols)
+        self.ctx = make_node_ctx(cfg)
+        self.state = init_state(cfg, trace)
+        self._step = jax.jit(
+            lambda s: cycle_step(s, cfg, self.geo, self.ctx))
+
+    def step(self) -> None:
+        self.state = self._step(self.state)
+
+    def stats(self) -> Dict[str, int]:
+        st = np.asarray(self.state.stats)
+        out = {k: int(v) for k, v in zip(STAT_NAMES, st)}
+        out["cycles"] = int(self.state.cycle)
+        out["finished"] = int(bool(finished(self.state)))
+        return out
+
+    def run(self, max_cycles: Optional[int] = None) -> Dict[str, int]:
+        limit = max_cycles or self.cfg.max_cycles
+        self.state = _run_jit(self.state, self.cfg,
+                              jnp.asarray(limit, jnp.int32), 1)
+        return self.stats()

@@ -1,0 +1,170 @@
+"""Vectorized simulator state (structure-of-arrays pytree).
+
+The GPU version's ``struct Flit / Router / Core`` (paper §6.2.1) become dense
+``int32`` arrays over all N = rows*cols nodes — the TPU-native layout
+(DESIGN.md §2).  All semantic rules S1..S13 are defined in
+:mod:`repro.core.ref_serial`; this module only lays out state.
+
+Flit field order (axis -1 of ``inp`` / arbitration candidates):
+    0 VALID, 1 AGE, 2 SRC, 3 DST, 4 OSRC, 5 TYP, 6 TAG, 7 PKT, 8 FID, 9 NFL
+Send-queue descriptor fields: 0 TYP, 1 DST, 2 OSRC, 3 TAG, 4 PKT, 5 NFL
+ROB slot fields: 0 SRC, 1 PKT, 2 TYP, 3 TAG, 4 OSRC, 5 NFL, 6 CNT
+Pending-completion fields: 0 VALID, 1 TYP, 2 SRC, 3 OSRC, 4 TAG
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .config import NUM_PORTS, SimConfig
+from .ref_serial import STAT_NAMES
+
+# flit fields
+F_VALID, F_AGE, F_SRC, F_DST, F_OSRC, F_TYP, F_TAG, F_PKT, F_FID, F_NFL = range(10)
+NUM_F = 10
+# queue descriptor fields
+Q_TYP, Q_DST, Q_OSRC, Q_TAG, Q_PKT, Q_NFL = range(6)
+NUM_Q = 6
+# rob fields
+R_SRC, R_PKT, R_TYP, R_TAG, R_OSRC, R_NFL, R_CNT = range(7)
+NUM_R = 7
+# pending fields
+P_VALID, P_TYP, P_SRC, P_OSRC, P_TAG = range(5)
+NUM_P = 5
+
+STAT_INDEX = {k: i for i, k in enumerate(STAT_NAMES)}
+NUM_STATS = len(STAT_NAMES)
+
+
+class SimState(NamedTuple):
+    # FSM (N,)
+    st: jnp.ndarray
+    ctr: jnp.ndarray
+    tr_ptr: jnp.ndarray
+    pend_addr: jnp.ndarray
+    install_mode: jnp.ndarray
+    pkt_ctr: jnp.ndarray
+    lru_clock: jnp.ndarray
+    # caches
+    l1_tag: jnp.ndarray      # (N, S1, W1)
+    l1_lru: jnp.ndarray
+    l1_owner: jnp.ndarray
+    l2_tag: jnp.ndarray      # (N, S2, W2)
+    l2_lru: jnp.ndarray
+    l2_mig: jnp.ndarray
+    l2_last: jnp.ndarray
+    l2_streak: jnp.ndarray
+    # directory: (dir_entries + 1,) — last slot is a scatter sink
+    dir_loc: jnp.ndarray
+    # forwarding table
+    fwd_tag: jnp.ndarray     # (N, Fe)
+    fwd_dst: jnp.ndarray
+    fwd_ptr: jnp.ndarray     # (N,)
+    # network input ports
+    inp: jnp.ndarray         # (N, 4, NUM_F)
+    # send queue (packet ring buffer)
+    q_desc: jnp.ndarray      # (N, Qp, NUM_Q)
+    q_head: jnp.ndarray      # (N,)
+    q_size: jnp.ndarray      # (N,)
+    q_fid: jnp.ndarray       # (N,)  flit cursor of head packet
+    # reorder buffer
+    rob: jnp.ndarray         # (N, K, NUM_R)
+    # pending completion register
+    pc: jnp.ndarray          # (N, NUM_P)
+    # statistics + clock
+    stats: jnp.ndarray       # (NUM_STATS,) int32
+    cycle: jnp.ndarray       # () int32
+    # workload (read-only during sim)
+    trace: jnp.ndarray       # (N, M)
+
+
+class Geometry(NamedTuple):
+    """Static (numpy) routing geometry, precomputed from the config."""
+
+    valid_port: np.ndarray   # (N, 4) bool — does this port physically exist
+    gather_node: np.ndarray  # (N, 4) int32 — node whose output feeds my input p
+    gather_port: np.ndarray  # (4,) int32 — which output port of that node
+    node_r: np.ndarray       # (N,)
+    node_c: np.ndarray       # (N,)
+
+
+class NodeCtx(NamedTuple):
+    """Per-node identity/geometry as *arrays* (shardable: inside shard_map
+    these are the local tile's slices; node ids stay global)."""
+
+    node_id: jnp.ndarray     # (Nl,) global node id (r*C + c)
+    node_r: jnp.ndarray      # (Nl,) global row
+    node_c: jnp.ndarray      # (Nl,) global col
+    valid_port: jnp.ndarray  # (Nl, 4) bool
+
+
+def make_node_ctx(cfg: SimConfig) -> NodeCtx:
+    geo = make_geometry(cfg.rows, cfg.cols)
+    return NodeCtx(jnp.arange(cfg.num_nodes, dtype=jnp.int32),
+                   jnp.asarray(geo.node_r), jnp.asarray(geo.node_c),
+                   jnp.asarray(geo.valid_port))
+
+
+def make_geometry(rows: int, cols: int) -> Geometry:
+    n = rows * cols
+    idx = np.arange(n)
+    r, c = idx // cols, idx % cols
+    valid = np.stack([r > 0, c < cols - 1, r < rows - 1, c > 0], axis=1)  # N,E,S,W
+    # input port p receives the opposite output of the neighbour in direction p
+    gnode = np.stack([idx - cols, idx + 1, idx + cols, idx - 1], axis=1)
+    gnode = np.where(valid, gnode, 0).astype(np.int32)
+    gport = np.array([2, 3, 0, 1], np.int32)  # S, W, N, E
+    return Geometry(valid.astype(bool), gnode, gport,
+                    r.astype(np.int32), c.astype(np.int32))
+
+
+def dir_shape(cfg: SimConfig) -> Tuple[int, ...]:
+    """Directory array shape. ``flat``: one global location array (+ sink
+    slot).  ``home``: entry for tag t lives at (t % N, t // N) — row-sharded
+    with the nodes, so every access is local to the tag's home node."""
+    if cfg.dir_layout == "flat":
+        return (cfg.dir_entries + 1,)
+    assert not cfg.centralized_directory, \
+        "home-sharded directory layout requires a distributed directory"
+    per = -(-cfg.dir_entries // cfg.num_nodes)
+    return (cfg.num_nodes, per + 1)
+
+
+def init_state(cfg: SimConfig, trace: np.ndarray) -> SimState:
+    cfg.validate()
+    n = cfg.num_nodes
+    ca = cfg.cache
+    i32 = jnp.int32
+    z = lambda *s: jnp.zeros(s, i32)
+    neg = lambda *s: jnp.full(s, -1, i32)
+    return SimState(
+        st=z(n), ctr=z(n), tr_ptr=z(n), pend_addr=neg(n), install_mode=z(n),
+        pkt_ctr=z(n), lru_clock=z(n),
+        l1_tag=neg(n, ca.l1_sets, ca.l1_ways),
+        l1_lru=z(n, ca.l1_sets, ca.l1_ways),
+        l1_owner=neg(n, ca.l1_sets, ca.l1_ways),
+        l2_tag=neg(n, ca.l2_sets, ca.l2_ways),
+        l2_lru=z(n, ca.l2_sets, ca.l2_ways),
+        l2_mig=z(n, ca.l2_sets, ca.l2_ways),
+        l2_last=neg(n, ca.l2_sets, ca.l2_ways),
+        l2_streak=z(n, ca.l2_sets, ca.l2_ways),
+        dir_loc=jnp.full(dir_shape(cfg), -1, i32),
+        fwd_tag=neg(n, cfg.fwd_entries), fwd_dst=neg(n, cfg.fwd_entries),
+        fwd_ptr=z(n),
+        inp=z(n, NUM_PORTS, NUM_F),
+        q_desc=z(n, cfg.send_queue + 1, NUM_Q),   # +1 = commit sink slot
+        q_head=z(n), q_size=z(n), q_fid=z(n),
+        rob=z(n, cfg.rob_slots, NUM_R),
+        pc=z(n, NUM_P),
+        stats=jnp.zeros(NUM_STATS, i32),
+        cycle=jnp.zeros((), i32),
+        trace=jnp.asarray(trace, i32),
+    )
+
+
+def bump(stats: jnp.ndarray, name: str, amount) -> jnp.ndarray:
+    """Add ``amount`` (scalar or array to be summed) to a named statistic."""
+    amt = jnp.sum(amount.astype(jnp.int32)) if hasattr(amount, "astype") else amount
+    return stats.at[STAT_INDEX[name]].add(jnp.asarray(amt, jnp.int32))

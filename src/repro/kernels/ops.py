@@ -1,0 +1,31 @@
+"""Jit'd public wrappers for the Pallas kernels with oracle dispatch.
+
+``backend="ref"`` runs the pure-jnp oracle (XLA — also the default inside
+the simulator so HLO cost analysis sees true FLOPs); ``backend="pallas"``
+runs the Pallas kernel (``interpret=True`` on CPU, compiled on TPU).
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .flash_attention import flash_attention_pallas
+from .router_phase import router_arbitrate_pallas
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def arbitrate(age, valid, we, dc, dr, vp, backend: str = "ref"):
+    """Phase-2 router arbitration. See :func:`repro.kernels.ref.arbitrate_ref`."""
+    if backend == "ref":
+        return ref.arbitrate_ref(age, valid, we, dc, dr, vp)
+    return router_arbitrate_pallas(age, valid, we, dc, dr, vp,
+                                   interpret=not _ON_TPU)
+
+
+def attention(q, k, v, causal: bool = True, backend: str = "ref"):
+    """Multi-head attention. See :func:`repro.kernels.ref.attention_ref`."""
+    if backend == "ref":
+        return ref.attention_ref(q, k, v, causal=causal)
+    return flash_attention_pallas(q, k, v, causal=causal,
+                                  interpret=not _ON_TPU)

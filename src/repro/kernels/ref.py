@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+``arbitrate_ref`` is the semantic definition of the paper's Phase-2 router
+arbitration (age-priority sort + PMDR port selection + deflection) — the
+vectorized simulator calls it directly, and the Pallas kernel in
+:mod:`repro.kernels.router_phase` must match it bit-for-bit.
+
+``attention_ref`` is the oracle for the blocked flash-attention kernel.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+I32 = jnp.int32
+
+
+def arbitrate_ref(age: jnp.ndarray, valid: jnp.ndarray, we: jnp.ndarray,
+                  dc: jnp.ndarray, dr: jnp.ndarray,
+                  vp: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Age-priority greedy port assignment for all routers at once.
+
+    Args:
+      age:   (N, S) candidate flit ages (S=5: 4 input ports + injection).
+      valid: (N, S) bool candidate present.
+      we:    (N, S) bool candidate wanted to eject but was refused (S11/S14).
+      dc:    (N, S) dst_col - col  (sign gives the desired X direction).
+      dr:    (N, S) dst_row - row.
+      vp:    (N, 4) bool port physically exists (mesh edges).
+
+    Returns:
+      assigned: (N, S) port index in 0..3, or -1 for invalid candidates.
+      deflect:  (N, S) bool — candidate did not get its first preference.
+    """
+    n, s_ = age.shape
+    ports = jnp.arange(4, dtype=I32)
+    slot = jnp.arange(s_, dtype=I32)
+
+    # priority key: age desc, slot asc (injection = last slot, loses ties)
+    key = jnp.where(valid, age * 8 + (s_ + 2 - slot), -1)
+
+    # PMDR preference scores (S9): lower = preferred.  A desired direction
+    # only scores if the port exists (matches serial `_prefs` vp filter; for
+    # in-mesh destinations the desired port always exists).
+    score = jnp.broadcast_to(10 + ports[None, None, :], (n, s_, 4))
+    score = score.at[:, :, 1].set(jnp.where(dc > 0, 0, score[:, :, 1]))
+    score = score.at[:, :, 3].set(jnp.where(dc < 0, 0, score[:, :, 3]))
+    score = score.at[:, :, 2].set(jnp.where(dr > 0, 1, score[:, :, 2]))
+    score = score.at[:, :, 0].set(jnp.where(dr < 0, 1, score[:, :, 0]))
+    score = jnp.where(vp[:, None, :], score, 1000)
+    first_pref = jnp.argmin(score, axis=2).astype(I32)
+
+    taken = jnp.zeros((n, 4), bool)
+    done = ~valid
+    assigned = jnp.full((n, s_), -1, I32)
+    deflect = jnp.zeros((n, s_), bool)
+    for _ in range(s_):
+        kk = jnp.where(done, -1, key)
+        best = jnp.argmax(kk, axis=1)
+        has = jnp.max(kk, axis=1) >= 0
+        bscore = jnp.take_along_axis(score, best[:, None, None].repeat(4, 2),
+                                     axis=1)[:, 0, :]
+        eff = bscore + taken.astype(I32) * 10000
+        port = jnp.argmin(eff, axis=1).astype(I32)
+        onehot_b = (slot[None, :] == best[:, None]) & has[:, None]
+        onehot_p = (ports[None, :] == port[:, None]) & has[:, None]
+        assigned = jnp.where(onehot_b, port[:, None], assigned)
+        fp = jnp.take_along_axis(first_pref, best[:, None], axis=1)[:, 0]
+        wej = jnp.take_along_axis(we, best[:, None], axis=1)[:, 0]
+        defl = wej | (port != fp)
+        deflect = jnp.where(onehot_b, defl[:, None], deflect)
+        taken = taken | onehot_p
+        done = done | onehot_b
+    return assigned, deflect
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True, scale: float | None = None
+                  ) -> jnp.ndarray:
+    """Reference attention. q,k,v: (B, H, S, D) / (B, H, T, D)."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        s_, t_ = logits.shape[-2:]
+        mask = jnp.tril(jnp.ones((s_, t_), bool), t_ - s_)
+        logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", w, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,140 @@
+"""Pallas TPU kernel: fused Phase-2 router arbitration over VMEM tiles.
+
+This is the simulator's hot loop (the paper's dominant GPU kernel,
+``FltsPrtAsgnOrDef``).  TPU-native layout: candidate slots live on the
+sublane axis (padded 5 -> 8) and routers on the lane axis (tiles of 128),
+so one (8, 128) VMEM tile holds 128 routers' full arbitration state and the
+age-priority "sort" is a branch-free 5-round greedy evaluated entirely in
+vector registers — the Mosaic analogue of the paper's Priority-Sort block.
+
+All operands are int32; the kernel is bit-exact against
+:func:`repro.kernels.ref.arbitrate_ref` (tests sweep shapes in interpret
+mode on CPU; compiled mode targets TPU v5e).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+I32 = jnp.int32
+
+SLOTS = 8        # padded candidate slots (5 used: 4 ports + injection)
+BLOCK_N = 128    # routers per tile (lane dimension)
+NSENTINEL = -1
+
+
+def _select_row(x, best, has):
+    """x: (SLOTS, BN); best: (1, BN) row index -> (1, BN) gathered values."""
+    rows = jax.lax.broadcasted_iota(I32, x.shape, 0)
+    sel = jnp.where((rows == best) & has, x, 0)
+    return jnp.sum(sel, axis=0, keepdims=True)
+
+
+def _router_kernel(age_ref, valid_ref, we_ref, dc_ref, dr_ref, vp_ref,
+                   assigned_ref, deflect_ref):
+    age = age_ref[...]          # (SLOTS, BN)
+    valid = valid_ref[...] > 0
+    we = we_ref[...] > 0
+    dc = dc_ref[...]
+    dr = dr_ref[...]
+    vp = vp_ref[...] > 0        # (SLOTS, BN); rows 0..3 hold the real ports
+
+    slot_iota = jax.lax.broadcasted_iota(I32, age.shape, 0)
+    key = jnp.where(valid, age * 8 + (7 - slot_iota), -1)
+
+    # PMDR preference scores, one (1, BN) row per port (N=0,E=1,S=2,W=3)
+    def port_valid(p):
+        rows = jax.lax.broadcasted_iota(I32, vp.shape, 0)
+        return jnp.sum(jnp.where(rows == p, vp.astype(I32), 0), axis=0,
+                       keepdims=True) > 0
+
+    vpN, vpE, vpS, vpW = (port_valid(p) for p in range(4))
+    base = lambda p, ok: jnp.where(ok, 10 + p, 1000)
+    scoreN = jnp.where(dr < 0, jnp.where(vpN, 1, 1000), base(0, vpN))
+    scoreE = jnp.where(dc > 0, jnp.where(vpE, 0, 1000), base(1, vpE))
+    scoreS = jnp.where(dr > 0, jnp.where(vpS, 1, 1000), base(2, vpS))
+    scoreW = jnp.where(dc < 0, jnp.where(vpW, 0, 1000), base(3, vpW))
+    # (scores broadcast (1,BN) port rows against (SLOTS,BN) candidates)
+
+    def argmin4(e0, e1, e2, e3):
+        m01 = jnp.minimum(e0, e1)
+        m23 = jnp.minimum(e2, e3)
+        m = jnp.minimum(m01, m23)
+        # first index attaining the min (ties -> lowest port, matching ref)
+        p = jnp.where(e3 == m, 3, 0)
+        p = jnp.where(e2 == m, 2, p)
+        p = jnp.where(e1 == m, 1, p)
+        p = jnp.where(e0 == m, 0, p)
+        return p.astype(I32)
+
+    first_pref = argmin4(scoreN, scoreE, scoreS, scoreW)   # (SLOTS, BN)
+
+    taken = [jnp.zeros_like(scoreN[:1] > 0) for _ in range(4)]  # 4 x (1, BN)
+    done = ~valid
+    assigned = jnp.full_like(age, NSENTINEL)
+    deflect = jnp.zeros_like(valid)
+    scores = [scoreN, scoreE, scoreS, scoreW]
+
+    for _ in range(5):
+        kk = jnp.where(done, -1, key)
+        kmax = jnp.max(kk, axis=0, keepdims=True)           # (1, BN)
+        has = kmax >= 0
+        # best slot = first row attaining kmax
+        is_max = (kk == kmax) & has
+        rows = jax.lax.broadcasted_iota(I32, kk.shape, 0)
+        best = jnp.min(jnp.where(is_max, rows, SLOTS), axis=0, keepdims=True)
+        eff = [_select_row(scores[p], best, has)
+               + taken[p].astype(I32) * 10000 for p in range(4)]
+        port = argmin4(*eff)                                 # (1, BN)
+        fp = _select_row(first_pref, best, has)
+        wej = _select_row(we.astype(I32), best, has) > 0
+        defl = wej | (port != fp)
+        sel = (rows == best) & has
+        assigned = jnp.where(sel, port, assigned)
+        deflect = deflect | (sel & defl)
+        for p in range(4):
+            taken[p] = taken[p] | (has & (port == p))
+        done = done | sel
+
+    assigned_ref[...] = assigned
+    deflect_ref[...] = deflect.astype(I32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def router_arbitrate_pallas(age, valid, we, dc, dr, vp, *, interpret=True):
+    """Pallas entry point.  All args (N, S)/(N, 4) as in ``arbitrate_ref``;
+    returns (assigned (N,S) int32, deflect (N,S) bool)."""
+    n, s_ = age.shape
+    assert s_ <= SLOTS
+    pad_n = (-n) % BLOCK_N
+
+    def prep(x, rows, fill=0):
+        x = x.astype(I32)
+        x = jnp.pad(x, ((0, pad_n), (0, rows - x.shape[1])),
+                    constant_values=fill)
+        return x.T                                  # (rows, N_pad)
+
+    age_t = prep(age, SLOTS)
+    valid_t = prep(valid.astype(I32), SLOTS)
+    we_t = prep(we.astype(I32), SLOTS)
+    dc_t = prep(dc, SLOTS)
+    dr_t = prep(dr, SLOTS)
+    vp_t = prep(vp.astype(I32), SLOTS)
+
+    n_pad = age_t.shape[1]
+    grid = (n_pad // BLOCK_N,)
+    spec = pl.BlockSpec((SLOTS, BLOCK_N), lambda i: (0, i))
+    assigned, deflect = pl.pallas_call(
+        _router_kernel,
+        grid=grid,
+        in_specs=[spec] * 6,
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((SLOTS, n_pad), jnp.int32),
+                   jax.ShapeDtypeStruct((SLOTS, n_pad), jnp.int32)],
+        interpret=interpret,
+    )(age_t, valid_t, we_t, dc_t, dr_t, vp_t)
+    return (assigned.T[:n, :s_].astype(I32),
+            deflect.T[:n, :s_] > 0)

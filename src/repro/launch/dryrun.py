@@ -1,0 +1,374 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent (sharding
+propagates, the program fits, collectives lower) and records the roofline
+inputs: HLO FLOPs/bytes from ``compiled.cost_analysis()`` and collective
+operand bytes parsed from the optimized HLO.
+
+Usage:
+    python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --out results/dryrun
+    python -m repro.launch.dryrun --arch noc-sim --shape noc_1m --mesh multi
+"""
+import argparse
+import json
+import re
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.shapes import SHAPES, applicable
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import tree_shardings
+from repro.train.optim import OptConfig, init_opt
+from repro.train.step import make_prefill_step, make_serve_step, make_train_step
+
+# NoC-simulator cells: simulated router grid sizes (paper max = 43k cores;
+# the sharded simulator goes to 16.7M)
+NOC_SHAPES = {
+    "noc_43k": (256, 256),       # >= the paper's 43,000-core maximum
+    "noc_1m": (1024, 1024),
+    "noc_16m": (4096, 4096),
+}
+
+COLLECTIVE_OP_RE = re.compile(
+    r"=\s*(.*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device communicated bytes per collective kind, from optimized HLO.
+
+    CPU-backend HLO references operands by name only, so each collective is
+    sized by its RESULT buffer (exact for all-reduce / permute / all-to-all;
+    the received volume for all-gather; a lower bound for reduce-scatter).
+    '-done' ops are skipped (their '-start' carries the type).
+    """
+    out = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_OP_RE.search(line)
+        if not m:
+            continue
+        types, kind = m.group(1), m.group(2)
+        toks = SHAPE_RE.findall(types)
+        if not toks:
+            continue
+        dt, dims = toks[-1]            # result type (last of a start-tuple)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out[kind] = out.get(kind, 0) + n * _DTYPE_BYTES[dt]
+    return out
+
+
+def _lower_lm(cfg, shp, mesh):
+    a_params = api.abstract_params(cfg)
+    s_params = tree_shardings(api.param_pspecs(cfg), mesh, a_params)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.parallel.sharding import resolve_pspec
+    repl = NamedSharding(mesh, P())
+
+    if shp.kind == "train":
+        opt = OptConfig()
+        a_opt = jax.eval_shape(lambda p: init_opt(opt, p), a_params)
+        # moments shard like their parameters
+        from repro.train.optim import OptState
+        s_opt_sh = OptState(mu=s_params, nu=s_params, step=repl)
+        a_batch = api.input_specs(cfg, "train", shp.global_batch, shp.seq_len)
+        s_batch = tree_shardings(api.input_pspecs(cfg, "train"), mesh, a_batch)
+        fn = make_train_step(cfg, opt, mesh=mesh)
+        jitted = jax.jit(fn, in_shardings=(s_params, s_opt_sh, s_batch),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(a_params, a_opt, a_batch)
+    elif shp.kind == "prefill":
+        a_batch = api.input_specs(cfg, "prefill", shp.global_batch, shp.seq_len)
+        s_batch = tree_shardings(api.input_pspecs(cfg, "prefill"), mesh, a_batch)
+        fn = make_prefill_step(cfg, mesh=mesh)
+        jitted = jax.jit(fn, in_shardings=(s_params, s_batch))
+        lowered = jitted.lower(a_params, a_batch)
+    else:  # decode
+        a_cache = api.abstract_cache(cfg, shp.global_batch, shp.seq_len)
+        s_cache = tree_shardings(
+            api.cache_pspecs(cfg, shp.global_batch, shp.seq_len), mesh,
+            a_cache)
+        a_tok = jax.ShapeDtypeStruct((shp.global_batch, 1), jnp.int32)
+        s_tok = NamedSharding(mesh, resolve_pspec(
+            P(("pod", "data"), None), mesh, (shp.global_batch, 1)))
+        fn = make_serve_step(cfg)
+        jitted = jax.jit(fn, in_shardings=(s_params, s_cache, s_tok),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(a_params, a_cache, a_tok)
+
+    return lowered
+
+
+def _measure(compiled) -> dict:
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", -1)),
+        "bytes": float(cost.get("bytes accessed", -1)),
+        "collective_bytes": coll,
+        "mem": {
+            "argument": int(mem.argument_size_in_bytes),
+            "output": int(mem.output_size_in_bytes),
+            "temp": int(mem.temp_size_in_bytes),
+            "alias": int(mem.alias_size_in_bytes),
+            "code": int(mem.generated_code_size_in_bytes),
+        },
+        "_mem_obj": mem,
+    }
+
+
+#: per-family layer-probe plan: (unit sizes, units in the real model)
+def _probe_plan(cfg):
+    import dataclasses
+    if cfg.family == "hybrid":
+        return None   # already unrolled: HLO costs are per-layer-correct
+    if cfg.family == "vlm":
+        iv = cfg.cross_attn_interval
+        mk = lambda u: dataclasses.replace(cfg, scan_layers=False,
+                                           n_layers=u * iv)
+        return (1, 2), cfg.n_layers // iv, mk
+    if cfg.family == "audio":
+        mk = lambda u: dataclasses.replace(cfg, scan_layers=False,
+                                           n_layers=u, encoder_layers=u)
+        return (2, 4), cfg.n_layers, mk
+    mk = lambda u: dataclasses.replace(cfg, scan_layers=False, n_layers=u)
+    return (2, 4), cfg.n_layers, mk
+
+
+def _extrapolate(m1: dict, m2: dict, u1: int, u2: int, units: int) -> dict:
+    """Linear per-unit extrapolation of probe costs to the real depth."""
+    def ex(a, b):
+        per = (b - a) / (u2 - u1)
+        return max(a + (units - u1) * per, 0.0)
+    coll = {}
+    kinds = set(m1["collective_bytes"]) | set(m2["collective_bytes"])
+    for k in kinds:
+        coll[k] = ex(m1["collective_bytes"].get(k, 0),
+                     m2["collective_bytes"].get(k, 0))
+    return {"flops": ex(m1["flops"], m2["flops"]),
+            "bytes": ex(m1["bytes"], m2["bytes"]),
+            "collective_bytes": coll}
+
+
+def lm_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    from repro.models import costs
+
+    cfg = registry.get(arch)
+    shp = SHAPES[shape_name]
+    ok, why = applicable(cfg.family, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "skipped": True, "why": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    t0 = time.time()
+    lowered = _lower_lm(cfg, shp, mesh)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    m = _measure(compiled)
+
+    # layer probes: true per-layer bytes/collectives (scan bodies are
+    # counted once by XLA cost analysis — DESIGN/EXPERIMENTS §Roofline)
+    corrected = None
+    plan = _probe_plan(cfg)
+    probe_s = 0.0
+    if plan is not None:
+        (u1, u2), units, mk = plan
+        try:
+            tp = time.time()
+            p1 = _measure(_lower_lm(mk(u1), shp, mesh).compile())
+            p2 = _measure(_lower_lm(mk(u2), shp, mesh).compile())
+            corrected = _extrapolate(p1, p2, u1, u2, units)
+            probe_s = time.time() - tp
+        except Exception as e:
+            corrected = {"error": repr(e)[:500]}
+    else:
+        corrected = {"flops": m["flops"], "bytes": m["bytes"],
+                     "collective_bytes": m["collective_bytes"]}
+
+    devices = int(np.prod(mesh.devices.shape))
+    res = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "devices": devices,
+        "flops": m["flops"],
+        "bytes": m["bytes"],
+        "collective_bytes": m["collective_bytes"],
+        "corrected": corrected,
+        "analytic_flops_global": costs.cell_flops(
+            cfg, shp.kind, shp.global_batch, shp.seq_len),
+        "attn_hbm_topup_global": costs.attn_hbm_bytes(
+            cfg, shp.kind, shp.global_batch, shp.seq_len),
+        "mem": m["mem"],
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.n_active_params(),
+        "tokens": shp.global_batch * (shp.seq_len if shp.kind != "decode"
+                                      else 1),
+        "kind": shp.kind,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "probe_s": round(probe_s, 1),
+    }
+    print(f"[dryrun] {arch} {shape_name} {'multi' if multi_pod else 'single'}"
+          f" OK flops={res['flops']:.3e} "
+          f"temp/device={res['mem']['temp']/2**30:.2f}GiB "
+          f"compile={t_compile:.0f}s probes={probe_s:.0f}s")
+    print("memory_analysis:", m["_mem_obj"])
+    return res
+
+
+def noc_cell(shape_name: str, multi_pod: bool) -> dict:
+    import dataclasses
+
+    from repro.core.config import SimConfig
+    from repro.core.sharded import make_sharded_step, state_specs, to_grid
+    from repro.core.state import init_state
+
+    rows, cols = NOC_SHAPES[shape_name]
+    cfg = SimConfig(rows=rows, cols=cols, addr_bits=24,
+                    centralized_directory=False, dir_layout="home")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    row_axes = ("pod", "data") if multi_pod else ("data",)
+    col_axes = ("model",)
+
+    t0 = time.time()
+    m = 200   # refs per core (paper's M)
+    trace_sds = jax.ShapeDtypeStruct((cfg.num_nodes, m), jnp.int32)
+    a_state = jax.eval_shape(
+        lambda tr: to_grid(init_state(cfg, tr), cfg), trace_sds)
+    geo_sds = (
+        jax.ShapeDtypeStruct((rows, cols), jnp.int32),
+        jax.ShapeDtypeStruct((rows, cols), jnp.int32),
+        jax.ShapeDtypeStruct((rows, cols), jnp.int32),
+        jax.ShapeDtypeStruct((rows, cols, 4), jnp.bool_),
+    )
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sspec = state_specs(cfg, row_axes, col_axes)
+    s_state = jax.tree.map(lambda p: NamedSharding(mesh, p), sspec,
+                           is_leaf=lambda x: isinstance(x, P))
+    gsh = NamedSharding(mesh, P(row_axes, col_axes))
+
+    # attach shardings to the abstract inputs so lowering sees the real
+    # distribution (ShapeDtypeStruct carries a sharding)
+    sds = lambda a, sh: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=sh)
+    a_state = jax.tree.map(sds, a_state, s_state)
+    geo_sds = tuple(sds(g, gsh) for g in geo_sds)
+
+    build = make_sharded_step(cfg, mesh, row_axes, col_axes)
+    step = build(8)   # 8 simulated cycles per call
+    lowered = step.lower(a_state, *geo_sds)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    # probe: a 1-cycle step gives true per-cycle costs (the 8-cycle scan
+    # body is counted once by cost analysis); corrected = per-cycle x 8
+    try:
+        p1 = _measure(build(1).lower(a_state, *geo_sds).compile())
+        corrected = {"flops": p1["flops"] * 8, "bytes": p1["bytes"] * 8,
+                     "collective_bytes": {k: v * 8 for k, v in
+                                          p1["collective_bytes"].items()}}
+    except Exception as e:
+        corrected = {"error": repr(e)[:500]}
+    res = {
+        "arch": "noc-sim", "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "devices": int(np.prod(mesh.devices.shape)),
+        "sim_nodes": rows * cols, "cycles_per_call": 8,
+        "flops": float(cost.get("flops", -1)),
+        "bytes": float(cost.get("bytes accessed", -1)),
+        "collective_bytes": coll,
+        "corrected": corrected,
+        "mem": {
+            "argument": int(mem.argument_size_in_bytes),
+            "output": int(mem.output_size_in_bytes),
+            "temp": int(mem.temp_size_in_bytes),
+            "alias": int(mem.alias_size_in_bytes),
+            "code": int(mem.generated_code_size_in_bytes),
+        },
+        "kind": "sim",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+    }
+    print(f"[dryrun] noc-sim {shape_name} "
+          f"{'multi' if multi_pod else 'single'} OK "
+          f"nodes={rows*cols} compile={t_compile:.0f}s")
+    print("memory_analysis:", mem)
+    return res
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str) -> dict:
+    multi = mesh_kind == "multi"
+    if arch == "noc-sim":
+        return noc_cell(shape, multi)
+    return lm_cell(arch, shape, multi)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for a in registry.ARCH_IDS:
+            for s in SHAPES:
+                for mk in ("single", "multi"):
+                    cells.append((a, s, mk))
+        for s in NOC_SHAPES:
+            for mk in ("single", "multi"):
+                cells.append(("noc-sim", s, mk))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape, args.mesh)]
+
+    for a, s, mk in cells:
+        path = outdir / f"{a}__{s}__{mk}.json"
+        if args.skip_existing and path.exists():
+            print(f"[dryrun] skip existing {path.name}")
+            continue
+        try:
+            res = run_cell(a, s, mk)
+        except Exception as e:  # record failures for triage
+            res = {"arch": a, "shape": s, "mesh": mk, "error": repr(e)[:2000]}
+            print(f"[dryrun] FAIL {a} {s} {mk}: {e}")
+        path.write_text(json.dumps(res, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""NoC-simulation launcher (the paper's workload).
+
+    PYTHONPATH=src python -m repro.launch.simulate --rows 16 --cols 16 \
+        --app matmul --refs 100
+Multi-device:
+    ... --sharded   (tiles the simulated mesh over jax.devices())
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.config import SimConfig
+from repro.core.trace import app_trace, random_trace
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=16)
+    ap.add_argument("--cols", type=int, default=16)
+    ap.add_argument("--app", default="matmul")
+    ap.add_argument("--refs", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--centralized", action="store_true",
+                    help="paper-default centralized directory (hot spot!)")
+    ap.add_argument("--no-migration", action="store_true")
+    ap.add_argument("--serial", action="store_true",
+                    help="run the golden-model serial simulator instead")
+    ap.add_argument("--sharded", action="store_true")
+    ap.add_argument("--max-cycles", type=int, default=200_000)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    cfg = SimConfig(rows=args.rows, cols=args.cols,
+                    centralized_directory=args.centralized,
+                    dir_layout="home" if args.sharded else "flat",
+                    migration_enabled=not args.no_migration,
+                    max_cycles=args.max_cycles)
+    tr = (random_trace(cfg, args.refs, args.seed) if args.app == "random"
+          else app_trace(cfg, args.app, args.refs, args.seed))
+
+    t0 = time.time()
+    if args.serial:
+        from repro.core.ref_serial import SerialSim
+        stats = SerialSim(cfg, tr).run()
+    elif args.sharded:
+        import jax
+        from repro.core.sharded import ShardedSim
+        n = len(jax.devices())
+        rows_tiles = 1
+        for cand in range(int(n ** 0.5), 0, -1):
+            if n % cand == 0 and args.rows % cand == 0 \
+                    and args.cols % (n // cand) == 0:
+                rows_tiles = cand
+                break
+        mesh = jax.make_mesh((rows_tiles, n // rows_tiles),
+                             ("data", "model"))
+        stats = ShardedSim(cfg, tr, mesh).run()
+    else:
+        from repro.core.sim import run
+        stats = run(cfg, tr, chunk=8)
+    dt = time.time() - t0
+
+    stats["wall_s"] = round(dt, 2)
+    stats["nodes"] = cfg.num_nodes
+    print(json.dumps(stats, indent=1))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(stats, f)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --reduced --steps 50 --batch 8 --seq 256
+
+Full-size configs target the production mesh (run under real TPU slices or
+with XLA_FLAGS=--xla_force_host_platform_device_count=N for dry exercises);
+``--reduced`` runs the same code path single-device.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import registry
+from repro.train.data import DataConfig
+from repro.train.loop import LoopConfig, Trainer
+from repro.train.optim import OptConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--no-resume", action="store_true")
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "single", "multi"])
+    args = ap.parse_args()
+
+    cfg = registry.reduced(args.arch) if args.reduced else registry.get(args.arch)
+    mesh = None
+    if args.mesh != "none":
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+
+    trainer = Trainer(
+        cfg,
+        OptConfig(lr=args.lr, warmup=min(20, args.steps // 5 + 1),
+                  total_steps=args.steps),
+        DataConfig(batch=args.batch, seq=args.seq),
+        LoopConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                   ckpt_every=args.ckpt_every, resume=not args.no_resume),
+        mesh=mesh,
+    )
+    out = trainer.run()
+    print(f"[train] done: {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Public model API: parameters, shardings, inputs, loss, decode.
+
+Everything needed by the trainer, server and dry-run:
+
+  abstract_params / init_params / param_pspecs     (never drift: one tree fn)
+  input_specs(cfg, shape)                          ShapeDtypeStruct stand-ins
+  loss_fn(cfg, params, batch)                      causal-LM cross entropy
+  decode_step(cfg, params, cache, tokens)          one-token serve step
+  abstract_cache / init_cache / cache_pspecs
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+from .params import abstract_leaf, init_leaf, spec_leaf
+from .zoo import DP, cache_tree, forward, param_tree
+
+
+def abstract_params(cfg: ModelConfig):
+    return param_tree(cfg, abstract_leaf(jnp.dtype(cfg.param_dtype)))
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array):
+    return param_tree(cfg, init_leaf(rng, jnp.dtype(cfg.param_dtype)))
+
+
+def param_pspecs(cfg: ModelConfig):
+    return param_tree(cfg, spec_leaf())
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    dt = jnp.dtype(cfg.compute_dtype)
+    leaf = lambda name, shape, spec, sc: jax.ShapeDtypeStruct(
+        shape, jnp.int32 if name == "idx" else dt)
+    return cache_tree(cfg, leaf, batch, cache_len)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    dt = jnp.dtype(cfg.compute_dtype)
+    leaf = lambda name, shape, spec, sc: jnp.zeros(
+        shape, jnp.int32 if name == "idx" else dt)
+    return cache_tree(cfg, leaf, batch, cache_len)
+
+
+def cache_pspecs(cfg: ModelConfig, batch: int = 1, cache_len: int = 128):
+    return cache_tree(cfg, lambda n, s, spec, sc: spec, batch, cache_len)
+
+
+# ---------------------------------------------------------------------------
+# inputs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, kind: str, global_batch: int,
+                seq_len: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (dry-run safe)."""
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.compute_dtype)
+    b = global_batch
+    if kind == "train" or kind == "prefill":
+        s = seq_len
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.family == "vlm":
+            out["img"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_img_tokens, cfg.d_model), dt)
+        if cfg.family == "audio":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_audio_frames, cfg.d_model), dt)
+        return out
+    if kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    raise ValueError(kind)
+
+
+def input_pspecs(cfg: ModelConfig, kind: str) -> Dict[str, P]:
+    out = {"tokens": P(DP, None)}
+    if kind == "train":
+        out["labels"] = P(DP, None)
+    if kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            out["img"] = P(DP, None, None)
+        if cfg.family == "audio":
+            out["frames"] = P(DP, None, None)
+    return out
+
+
+def make_inputs(cfg: ModelConfig, kind: str, batch: int, seq: int,
+                rng: np.random.Generator) -> Dict[str, jnp.ndarray]:
+    """Concrete random inputs (smoke tests / examples)."""
+    out = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32)}
+    if kind == "train":
+        out["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32)
+    if kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            out["img"] = jnp.asarray(
+                rng.standard_normal((batch, cfg.n_img_tokens, cfg.d_model)),
+                jnp.dtype(cfg.compute_dtype))
+        if cfg.family == "audio":
+            out["frames"] = jnp.asarray(
+                rng.standard_normal((batch, cfg.n_audio_frames, cfg.d_model)),
+                jnp.dtype(cfg.compute_dtype))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# loss / decode
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg: ModelConfig, params, batch, mesh=None) -> jnp.ndarray:
+    logits, _ = forward(cfg, params, batch, cache=None, mesh=mesh)
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    # gold logit via masked reduction (vocab stays sharded; a gather here
+    # would all-gather the full logits)
+    vidx = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vidx == labels[..., None], lf, 0.0), axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def forward_logits(cfg: ModelConfig, params, batch, mesh=None):
+    """Cache-free forward (training/prefill)."""
+    return forward(cfg, params, batch, cache=None, mesh=mesh)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    """One decode step: tokens (B, 1) -> (logits (B, vocab), new cache)."""
+    logits, new_cache = forward(cfg, params, {"tokens": tokens}, cache=cache)
+    return logits[:, -1], new_cache
+
+
+def prefill(cfg: ModelConfig, params, batch, cache):
+    """Run the prompt through the model writing into the cache."""
+    logits, new_cache = forward(cfg, params, batch, cache=cache)
+    return logits[:, -1], new_cache

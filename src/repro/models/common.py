@@ -1,0 +1,265 @@
+"""Shared transformer layers (pure functions over param dicts)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def cdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def shard_act(x: jnp.ndarray, spec, mesh) -> jnp.ndarray:
+    """Megatron-style activation sharding constraint (no-op without a mesh).
+
+    Used to keep the residual stream sequence-sharded between layers so
+    remat-saved activations shrink by the tensor-parallel degree; GSPMD
+    inserts the all-gather/reduce-scatter pair around attention/FFN."""
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding
+    from repro.parallel.sharding import resolve_pspec
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, resolve_pspec(spec, mesh, x.shape)))
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D); pos: (B, S) or (S,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if pos.ndim == 1:
+        pos = pos[None, :]
+    ang = pos[..., None].astype(jnp.float32) * freq          # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def _mask_logits(logits: jnp.ndarray, q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                 causal: bool, window: int) -> jnp.ndarray:
+    """logits: (B, H, S, T); positions broadcastable (B, S)/(B, T)."""
+    ok = jnp.ones(logits.shape[-2:], bool)[None, None]
+    qp = q_pos[:, None, :, None]
+    kp = k_pos[:, None, None, :]
+    if causal:
+        ok = ok & (qp >= kp)
+    if window > 0:
+        ok = ok & (qp - kp < window)
+    return jnp.where(ok, logits, -1e30)
+
+
+#: chunk sizes for the blocked (flash-style) XLA attention path
+BLOCK_Q = 512
+BLOCK_K = 1024
+#: use blocked attention when S*T exceeds this (full scores would blow VMEM/HBM)
+BLOCK_THRESHOLD = 2048 * 2048
+
+
+def _blocked_attention(q, k, v, q_pos, k_pos, causal, window,
+                       qc=BLOCK_Q, kc=BLOCK_K, banded: bool = False):
+    """Online-softmax attention, chunked over queries and keys.
+
+    Peak memory per step is (B, KV, rep, qc, kc) instead of (B, H, S, T) —
+    the XLA analogue of the Pallas flash kernel (used on CPU/dry-run so the
+    compiled HLO carries the true cost model).
+
+    ``banded=True`` (sliding-window path): each query chunk visits only the
+    k-chunks intersecting its [q-window, q] band — O(S·window) instead of
+    O(S·T) compute/traffic.  Requires contiguous positions (train/prefill).
+    """
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    kvh = k.shape[2]
+    rep = h // kvh
+    qc = min(qc, s)
+    kc = min(kc, t)
+    while s % qc:
+        qc //= 2
+    while t % kc:
+        kc //= 2
+    nq, nk = s // qc, t // kc
+    f32 = jnp.float32
+    qf = (q.astype(f32) / (d ** 0.5)).reshape(b, nq, qc, kvh, rep, d)
+    qpos_c = q_pos.reshape(b, nq, qc)
+
+    use_band = banded and window > 0 and causal
+    # k-chunks per band: cover [qi*qc - window + 1 .. qi*qc + qc - 1]
+    nk_band = min(nk, (window + qc - 2) // kc + 2) if use_band else nk
+
+    def q_chunk(qi_):
+        qcur, qp, qi = qi_
+        m0 = jnp.full((b, kvh, rep, qc), -1e30, f32)
+        l0 = jnp.zeros((b, kvh, rep, qc), f32)
+        a0 = jnp.zeros((b, qc, kvh, rep, d), f32)
+        if use_band:
+            lo = jnp.maximum(qi * qc - (window - 1), 0) // kc
+        else:
+            lo = jnp.zeros((), jnp.int32)
+
+        @jax.checkpoint
+        def k_chunk(carry, j):
+            m, l, acc = carry
+            in_range = (lo + j) < nk     # banded tail: mask, never revisit
+            kj = jnp.clip(lo + j, 0, nk - 1)
+            ks = jax.lax.dynamic_slice_in_dim(k, kj * kc, kc, 1).astype(f32)
+            vs = jax.lax.dynamic_slice_in_dim(v, kj * kc, kc, 1).astype(f32)
+            kp = jax.lax.dynamic_slice_in_dim(k_pos, kj * kc, kc, 1)
+            lg = jnp.einsum("bqkrd,btkd->bkrqt", qcur, ks)
+            ok = jnp.broadcast_to(in_range, (b, 1, 1, qc, kc))
+            qp_ = qp[:, None, None, :, None]
+            kp_ = kp[:, None, None, None, :]
+            if causal:
+                ok = ok & (qp_ >= kp_)
+            if window > 0:
+                ok = ok & (qp_ - kp_ < window)
+            lg = jnp.where(ok, lg, -1e30)
+            m_new = jnp.maximum(m, jnp.max(lg, axis=-1))
+            p = jnp.exp(lg - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha.transpose(0, 3, 1, 2)[..., None] + \
+                jnp.einsum("bkrqt,btkd->bqkrd", p, vs)
+            return (m_new, l_new, acc_new), ()
+
+        (m, l, acc), _ = jax.lax.scan(k_chunk, (m0, l0, a0),
+                                      jnp.arange(nk_band))
+        denom = jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return acc / denom                          # (b, qc, kvh, rep, d)
+
+    out = jax.lax.map(jax.checkpoint(q_chunk),
+                      (qf.transpose(1, 0, 2, 3, 4, 5),
+                       qpos_c.transpose(1, 0, 2),
+                       jnp.arange(nq, dtype=jnp.int32)))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, d)
+    return out.astype(q.dtype)
+
+
+def attention(cfg: ModelConfig, q: jnp.ndarray, k: jnp.ndarray,
+              v: jnp.ndarray, q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+              causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """GQA attention.  q: (B, S, H, D); k/v: (B, T, KV, D) -> (B, S, H, D)."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    if cfg.use_pallas_attention and window == 0 and q_pos.shape == k_pos.shape \
+            and s % 128 == 0 and k.shape[1] % 128 == 0:
+        from repro.kernels import ops as kops
+        kk = jnp.repeat(k, rep, axis=2) if rep > 1 else k
+        vv = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+        o = kops.attention(q.transpose(0, 2, 1, 3), kk.transpose(0, 2, 1, 3),
+                           vv.transpose(0, 2, 1, 3), causal=causal,
+                           backend="pallas")
+        return o.transpose(0, 2, 1, 3)
+    if s > 1 and s * k.shape[1] > BLOCK_THRESHOLD:
+        banded = getattr(cfg, "banded_attention", False) and window > 0
+        if banded:
+            # window-matched chunks: visited pairs ~ S*(window+qc) instead
+            # of S*T — small chunks tighten the band
+            return _blocked_attention(q, k, v, q_pos, k_pos, causal, window,
+                                      qc=256, kc=256, banded=True)
+        return _blocked_attention(q, k, v, q_pos, k_pos, causal, window)
+    qf = q.astype(jnp.float32) / (d ** 0.5)
+    qg = qf.reshape(b, s, kvh, rep, d)
+    logits = jnp.einsum("bskrd,btkd->bkrst", qg, k.astype(jnp.float32))
+    logits = logits.reshape(b, kvh * rep, s, k.shape[1])
+    logits = _mask_logits(logits, q_pos, k_pos, causal, window)
+    w = jax.nn.softmax(logits, axis=-1)
+    wg = w.reshape(b, kvh, rep, s, k.shape[1])
+    o = jnp.einsum("bkrst,btkd->bskrd", wg, v.astype(jnp.float32))
+    return o.reshape(b, s, h, d).astype(q.dtype)
+
+
+def attn_block(cfg: ModelConfig, p: dict, x: jnp.ndarray, pos: jnp.ndarray,
+               cache: Optional[Tuple] = None, causal: bool = True,
+               window: int = 0, rope_on: bool = True):
+    """Self-attention block (pre-norm, residual).  Returns (x, new_cache).
+
+    cache = (k_cache (B, T, KV, D), v_cache, write_idx) for decode; the
+    write index is a rolling pointer when ``window`` bounds the cache.
+    """
+    b, s, _ = x.shape
+    h, kvh, d = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    y = rmsnorm(x, p["ln"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", y, p["wq"].astype(y.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", y, p["wk"].astype(y.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", y, p["wv"].astype(y.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(y.dtype)
+        k = k + p["bk"].astype(y.dtype)
+        v = v + p["bv"].astype(y.dtype)
+    if rope_on:
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+
+    if cache is None:
+        o = attention(cfg, q, k, v, pos if pos.ndim == 2 else
+                      jnp.broadcast_to(pos[None], (b, s)),
+                      pos if pos.ndim == 2 else
+                      jnp.broadcast_to(pos[None], (b, s)),
+                      causal=causal, window=window)
+        new_cache = None
+    else:
+        kc, vc, idx = cache
+        t = kc.shape[1]
+        slot = idx % t if window > 0 else idx
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, slot, 0, 0))
+        # absolute positions of cache slots
+        if window > 0:
+            base = idx - slot
+            kpos = jnp.arange(t)[None, :] + base
+            kpos = jnp.where(jnp.arange(t)[None, :] <= slot, kpos, kpos - t)
+        else:
+            kpos = jnp.broadcast_to(jnp.arange(t)[None, :], (b, t))
+        qpos = jnp.broadcast_to(pos[None] if pos.ndim == 1 else pos, (b, s))
+        valid = (kpos >= 0) & (kpos <= idx)
+        kpos_m = jnp.where(valid, kpos, 1 << 30)
+        o = attention(cfg, q, kc, vc, qpos, kpos_m, causal=True,
+                      window=window)
+        new_cache = (kc, vc, idx + s)
+
+    o = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+    return x + o, new_cache
+
+
+def swiglu(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = rmsnorm(x, p["ln"], cfg.norm_eps)
+    g = jnp.einsum("bsd,df->bsf", y, p["w1"].astype(y.dtype))
+    u = jnp.einsum("bsd,df->bsf", y, p["w3"].astype(y.dtype))
+    z = jax.nn.silu(g.astype(jnp.float32)).astype(y.dtype) * u
+    return x + jnp.einsum("bsf,fd->bsd", z, p["w2"].astype(y.dtype))
+
+
+def cross_attn_block(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+                     kv_embed: jnp.ndarray, gated: bool = True):
+    """Cross-attention onto precomputed embeddings (vision / audio)."""
+    b, s, _ = x.shape
+    t = kv_embed.shape[1]
+    y = rmsnorm(x, p["ln"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", y, p["wq"].astype(y.dtype))
+    kvn = rmsnorm(kv_embed, p["ln_kv"], cfg.norm_eps) if "ln_kv" in p else kv_embed
+    k = jnp.einsum("btd,dhk->bthk", kvn.astype(y.dtype), p["wk"].astype(y.dtype))
+    v = jnp.einsum("btd,dhk->bthk", kvn.astype(y.dtype), p["wv"].astype(y.dtype))
+    qpos = jnp.zeros((b, s), jnp.int32)
+    kpos = jnp.zeros((b, t), jnp.int32)
+    o = attention(cfg, q, k, v, qpos, kpos, causal=False)
+    o = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+    if gated:
+        o = o * jnp.tanh(p["gate"].astype(jnp.float32)).astype(o.dtype)
+    return x + o

@@ -1,0 +1,59 @@
+"""Parameter-tree construction with a single source of truth.
+
+Every model family defines one ``tree(cfg, leaf)`` function where ``leaf``
+is a callback ``leaf(name, shape, spec, scale)``.  Instantiating it with
+different callbacks yields real parameters, ShapeDtypeStructs (dry-run) or
+PartitionSpec trees — the three can never drift.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+Leaf = Callable[[str, tuple, P, float], Any]
+
+
+class Alt(tuple):
+    """Ordered sharding alternatives; the resolver picks the first whose
+    sharded dims divide evenly on the target mesh (e.g. GQA head-sharding
+    falls back to input-dim row-parallel when heads % tp != 0)."""
+
+    def __new__(cls, *specs: P):
+        return super().__new__(cls, specs)
+
+
+def init_leaf(rng: jax.Array, dtype) -> Leaf:
+    """Initializer; folds the leaf name into the key.
+
+    Conventions: ``scale == 0`` -> zeros (biases, gates);
+    ``scale == 1`` -> ones (norm scales); otherwise normal * scale.
+    """
+    def leaf(name: str, shape: tuple, spec: P, scale: float):
+        if scale == 0.0:
+            return jnp.zeros(shape, dtype)
+        if scale == 1.0:
+            return jnp.ones(shape, dtype)
+        key = jax.random.fold_in(rng, zlib_crc(name))
+        return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+    return leaf
+
+
+def abstract_leaf(dtype) -> Leaf:
+    def leaf(name, shape, spec, scale):
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return leaf
+
+
+def spec_leaf() -> Leaf:
+    def leaf(name, shape, spec, scale):
+        return spec
+    return leaf
+
+
+def zlib_crc(name: str) -> int:
+    import zlib
+    return zlib.crc32(name.encode()) & 0x7FFFFFFF

@@ -1,0 +1,173 @@
+"""Mamba-2 SSD (state-space duality, arXiv:2405.21060) — TPU-adapted.
+
+The chunked SSD form is used for training/prefill: intra-chunk terms are
+dense matmuls (MXU-friendly) and the inter-chunk recurrence is a short
+``lax.scan`` over chunk states — this is the hardware adaptation of the
+paper's warp-level scan (DESIGN.md §2 applies to the NoC simulator; the
+same HBM->VMEM blocking logic applies here).  Decode is the O(1) recurrent
+update.  Single SSM group (B/C shared across heads), like mamba2-130m.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import rmsnorm
+from .config import ModelConfig
+
+CHUNK = 128
+
+
+def segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., Q) -> (..., Q, Q) lower-tri segment sums: out[i,j] = sum_{j<m<=i} x[m]."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+                b: jnp.ndarray, c: jnp.ndarray,
+                h0: Optional[jnp.ndarray] = None):
+    """SSD scan.
+
+    x:  (B, S, H, P)  inputs per head
+    dt: (B, S, H)     softplus'd step sizes
+    a_log: (H,)       -exp(a_log) is the decay rate
+    b, c: (B, S, N)   shared-input/output projections (single group)
+    h0: (B, H, P, N)  optional initial state.
+    Returns (y (B, S, H, P), h_final (B, H, P, N)).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(CHUNK, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    f32 = jnp.float32
+
+    a = -jnp.exp(a_log.astype(f32))                      # (H,) negative
+    dta = dt.astype(f32) * a[None, None, :]              # (B, S, H)
+    xdt = x.astype(f32) * dt.astype(f32)[..., None]      # (B, S, H, P)
+
+    # reshape into chunks
+    dta_c = dta.reshape(bsz, nc, q, h)
+    x_c = xdt.reshape(bsz, nc, q, h, p)
+    b_c = b.astype(f32).reshape(bsz, nc, q, n)
+    c_c = c.astype(f32).reshape(bsz, nc, q, n)
+
+    # intra-chunk (diagonal) term: attention-like with decay kernel
+    # (the exp(segsum) factor is 0 above the diagonal -> causal by mask)
+    l = jnp.exp(segsum(dta_c.transpose(0, 1, 3, 2)))     # (B, nc, H, Q, Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", c_c, b_c)     # (B, nc, Q, Q)
+    y_diag = jnp.einsum("bcqk,bchqk,bckhp->bcqhp", scores, l, x_c)
+
+    # chunk-final states: sum_k decay(end..k) * B_k x_k
+    dta_cs = jnp.cumsum(dta_c, axis=2)                   # (B, nc, Q, H)
+    decay_to_end = jnp.exp(dta_cs[:, :, -1:, :] - dta_cs)  # (B, nc, Q, H)
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn", b_c, decay_to_end, x_c)
+
+    # inter-chunk recurrence over chunk index
+    chunk_decay = jnp.exp(dta_cs[:, :, -1, :])           # (B, nc, H)
+    h_init = jnp.zeros((bsz, h, p, n), f32) if h0 is None else h0.astype(f32)
+
+    def step(carry, inp):
+        st, cd = inp                                     # (B,H,P,N), (B,H)
+        new = carry * cd[:, :, None, None] + st
+        return new, carry                                # emit PRE-state
+
+    h_fin, h_prevs = jax.lax.scan(
+        step, h_init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)           # (B, nc, H, P, N)
+
+    # off-diagonal: contribution of carried state into each position
+    decay_from_start = jnp.exp(dta_cs)                   # (B, nc, Q, H)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", c_c, h_prevs,
+                       decay_from_start)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y.astype(x.dtype), h_fin
+
+
+def ssd_decode(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+               b: jnp.ndarray, c: jnp.ndarray, h: jnp.ndarray):
+    """One-token recurrent update.  x: (B, 1, H, P); b/c: (B, 1, N);
+    h: (B, H, P, N) -> (y (B, 1, H, P), h')."""
+    f32 = jnp.float32
+    a = -jnp.exp(a_log.astype(f32))
+    dta = dt[:, 0].astype(f32) * a[None, :]              # (B, H)
+    decay = jnp.exp(dta)[:, :, None, None]
+    xdt = (x[:, 0].astype(f32) * dt[:, 0].astype(f32)[..., None])  # (B,H,P)
+    h_new = h.astype(f32) * decay + jnp.einsum(
+        "bhp,bn->bhpn", xdt, b[:, 0].astype(f32))
+    y = jnp.einsum("bhpn,bn->bhp", h_new, c[:, 0].astype(f32))
+    return y[:, None].astype(x.dtype), h_new
+
+
+def causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray,
+                state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d.  xbc: (B, S, D); w: (K, D); state (B, K-1, D).
+    Returns (y (B, S, D), new_state (B, K-1, D))."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)           # (B, S+K-1, D)
+    y = sum(full[:, i:i + xbc.shape[1]] * w[i][None, None, :]
+            for i in range(k))
+    new_state = full[:, -(k - 1):] if k > 1 else pad
+    return jax.nn.silu((y + bias[None, None]).astype(jnp.float32)
+                       ).astype(xbc.dtype), new_state
+
+
+def mamba2_mix(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+               cache: Optional[Tuple] = None, gated: bool = True):
+    """Full mamba2 mixer.  x: (B, S, d_model) -> (y, new_cache).
+
+    cache = (conv_state (B, K-1, conv_dim), ssm_state (B, H, P, N)).
+    Param dict p: in_z (d, din) [optional], in_x (d, din), in_b (d, N),
+    in_c (d, N), in_dt (d, H), conv_w (K, din+2N), conv_b, a_log (H,),
+    d_skip (H,), dt_bias (H,), out (din, d).
+    """
+    bsz, s, _ = x.shape
+    din = cfg.d_inner
+    nh, ph, ns = cfg.n_ssm_heads, cfg.ssm_d_head, cfg.ssm_state
+
+    xi = jnp.einsum("bsd,de->bse", x, p["in_x"].astype(x.dtype))
+    bb = jnp.einsum("bsd,dn->bsn", x, p["in_b"].astype(x.dtype))
+    cc = jnp.einsum("bsd,dn->bsn", x, p["in_c"].astype(x.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x, p["in_dt"].astype(x.dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+    xbc = jnp.concatenate([xi, bb, cc], axis=-1)
+    conv_state = None if cache is None else cache[0]
+    xbc, conv_state_new = causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xi = xbc[..., :din]
+    bb = xbc[..., din:din + ns]
+    cc = xbc[..., din + ns:]
+
+    xh = xi.reshape(bsz, s, nh, ph)
+    if cache is None:
+        y, h_fin = ssd_chunked(xh, dt, p["a_log"], bb, cc)
+        new_cache = None
+    else:
+        y, h_fin = ssd_decode(xh, dt, p["a_log"], bb, cc, cache[1])
+        new_cache = (conv_state_new, h_fin)
+    y = y + xh.astype(jnp.float32).astype(y.dtype) * \
+        p["d_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, din)
+    if gated and "in_z" in p:
+        z = jnp.einsum("bsd,de->bse", x, p["in_z"].astype(x.dtype))
+        y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    return jnp.einsum("bse,ed->bsd", y, p["out"].astype(y.dtype)), new_cache
+
+
+def mamba_block(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+                cache: Optional[Tuple] = None):
+    y = rmsnorm(x, p["ln"], cfg.norm_eps)
+    o, new_cache = mamba2_mix(cfg, p, y, cache)
+    return x + o, new_cache

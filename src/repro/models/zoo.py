@@ -1,0 +1,503 @@
+"""The architecture zoo: one parameter-tree builder + forward per family.
+
+Families: dense (llama/qwen GQA), moe (qwen2-moe / moonlight), ssm
+(mamba2 SSD), hybrid (hymba: parallel attn+SSM heads, sliding window),
+vlm (llama-3.2-vision: gated cross-attn every 5th layer), audio (whisper
+enc-dec; conv/mel frontend stubbed as precomputed frame embeddings).
+
+Everything is a pure function over nested dict params; layer stacks are
+scanned (small HLO, fast dry-run compiles) except hybrid, whose per-layer
+cache shapes differ (window vs global layers).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import (attention, attn_block, cdt, cross_attn_block, rmsnorm,
+                     rope, shard_act, swiglu)
+from .config import ModelConfig
+from .moe import moe_block
+from .params import Alt, Leaf
+from .ssm import causal_conv, mamba2_mix, mamba_block, ssd_chunked, ssd_decode
+
+# mesh axis aliases used in the PartitionSpecs below
+DP = ("pod", "data")     # batch axis
+TP = "model"             # tensor axis
+FS = ("pod", "data")     # FSDP axis: params/grads/moments sharded over data
+                         # (GSPMD all-gathers weights per layer, reduce-
+                         # scatters grads — ZeRO-3 semantics)
+
+
+# ---------------------------------------------------------------------------
+# parameter trees
+# ---------------------------------------------------------------------------
+
+def _attn_tree(cfg: ModelConfig, leaf: Leaf, pre: str, ln_kv: bool = False,
+               gate: bool = False, lead: tuple = ()) -> Dict[str, Any]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    sc = 0.02
+    lp = tuple(None for _ in lead)
+    # primary: Megatron head-sharding (+FSDP on d); fallback: input-dim
+    # row-parallel (+FSDP on head_dim)
+    qkv_spec = Alt(P(*lp, FS, TP, None), P(*lp, TP, None, FS),
+                   P(*lp, FS, None, None), P(*lp, None, None, None))
+    o_spec = Alt(P(*lp, TP, None, FS), P(*lp, FS, None, TP),
+                 P(*lp, None, None, FS), P(*lp, None, None, None))
+    t = {
+        "ln": leaf(pre + ".ln", lead + (d,), P(*lp, None), 1.0),
+        "wq": leaf(pre + ".wq", lead + (d, h, hd), qkv_spec, sc),
+        "wk": leaf(pre + ".wk", lead + (d, kv, hd), qkv_spec, sc),
+        "wv": leaf(pre + ".wv", lead + (d, kv, hd), qkv_spec, sc),
+        "wo": leaf(pre + ".wo", lead + (h, hd, d), o_spec, sc),
+    }
+    if cfg.qkv_bias:
+        b_spec = Alt(P(*lp, TP, None), P(*lp, None, None))
+        t["bq"] = leaf(pre + ".bq", lead + (h, hd), b_spec, 0.0)
+        t["bk"] = leaf(pre + ".bk", lead + (kv, hd), b_spec, 0.0)
+        t["bv"] = leaf(pre + ".bv", lead + (kv, hd), b_spec, 0.0)
+    if ln_kv:
+        t["ln_kv"] = leaf(pre + ".ln_kv", lead + (d,), P(*lp, None), 1.0)
+    if gate:
+        t["gate"] = leaf(pre + ".gate", lead + (1,), P(*lp, None), 0.0)
+    return t
+
+
+def _mlp_tree(cfg: ModelConfig, leaf: Leaf, pre: str, lead: tuple = ()):
+    d, f = cfg.d_model, cfg.d_ff
+    lp = tuple(None for _ in lead)
+    return {
+        "ln": leaf(pre + ".ln", lead + (d,), P(*lp, None), 1.0),
+        "w1": leaf(pre + ".w1", lead + (d, f), Alt(P(*lp, FS, TP),
+                                                   P(*lp, None, TP)), 0.02),
+        "w3": leaf(pre + ".w3", lead + (d, f), Alt(P(*lp, FS, TP),
+                                                   P(*lp, None, TP)), 0.02),
+        "w2": leaf(pre + ".w2", lead + (f, d), Alt(P(*lp, TP, FS),
+                                                   P(*lp, TP, None)), 0.02),
+    }
+
+
+def _moe_tree(cfg: ModelConfig, leaf: Leaf, pre: str, lead: tuple = ()):
+    d, e, f = cfg.d_model, cfg.moe_experts, cfg.moe_d_ff
+    lp = tuple(None for _ in lead)
+    # primary: expert parallelism (+FSDP on d); fallback: TP inside each
+    # expert's FFN (+FSDP on d)
+    w13_spec = Alt(P(*lp, TP, FS, None), P(*lp, None, FS, TP),
+                   P(*lp, None, None, TP), P(*lp, None, None, None))
+    w2_spec = Alt(P(*lp, TP, None, FS), P(*lp, None, TP, FS),
+                  P(*lp, None, TP, None), P(*lp, None, None, None))
+    t = {
+        "ln": leaf(pre + ".ln", lead + (d,), P(*lp, None), 1.0),
+        "router": leaf(pre + ".router", lead + (d, e), P(*lp, None, None), 0.02),
+        "w1": leaf(pre + ".w1", lead + (e, d, f), w13_spec, 0.02),
+        "w3": leaf(pre + ".w3", lead + (e, d, f), w13_spec, 0.02),
+        "w2": leaf(pre + ".w2", lead + (e, f, d), w2_spec, 0.02),
+    }
+    if cfg.moe_shared:
+        fs = cfg.moe_shared * f
+        t["w1s"] = leaf(pre + ".w1s", lead + (d, fs), Alt(
+            P(*lp, FS, TP), P(*lp, None, TP)), 0.02)
+        t["w3s"] = leaf(pre + ".w3s", lead + (d, fs), Alt(
+            P(*lp, FS, TP), P(*lp, None, TP)), 0.02)
+        t["w2s"] = leaf(pre + ".w2s", lead + (fs, d), Alt(
+            P(*lp, TP, FS), P(*lp, TP, None)), 0.02)
+    return t
+
+
+def _mamba_tree(cfg: ModelConfig, leaf: Leaf, pre: str, lead: tuple = (),
+                gated: bool = True):
+    d, din, ns = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = cfg.n_ssm_heads
+    k = cfg.conv_width
+    convd = din + 2 * ns
+    lp = tuple(None for _ in lead)
+    t = {
+        "ln": leaf(pre + ".ln", lead + (d,), P(*lp, None), 1.0),
+        "in_x": leaf(pre + ".in_x", lead + (d, din), Alt(
+            P(*lp, FS, TP), P(*lp, None, TP)), 0.02),
+        "in_b": leaf(pre + ".in_b", lead + (d, ns), P(*lp, FS, None), 0.02),
+        "in_c": leaf(pre + ".in_c", lead + (d, ns), P(*lp, FS, None), 0.02),
+        "in_dt": leaf(pre + ".in_dt", lead + (d, nh), P(*lp, FS, None), 0.02),
+        "conv_w": leaf(pre + ".conv_w", lead + (k, convd), P(*lp, None, TP), 0.1),
+        "conv_b": leaf(pre + ".conv_b", lead + (convd,), P(*lp, TP), 0.0),
+        "a_log": leaf(pre + ".a_log", lead + (nh,), P(*lp, None), 0.5),
+        "d_skip": leaf(pre + ".d_skip", lead + (nh,), P(*lp, None), 1.0),
+        "dt_bias": leaf(pre + ".dt_bias", lead + (nh,), P(*lp, None), 0.5),
+        "out": leaf(pre + ".out", lead + (din, d), Alt(
+            P(*lp, TP, FS), P(*lp, TP, None)), 0.02),
+    }
+    if gated:
+        t["in_z"] = leaf(pre + ".in_z", lead + (d, din), Alt(
+            P(*lp, FS, TP), P(*lp, None, TP)), 0.02)
+    return t
+
+
+def param_tree(cfg: ModelConfig, leaf: Leaf) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab
+    t: Dict[str, Any] = {
+        "embed": leaf("embed", (v, d), Alt(P(TP, FS), P(FS, TP),
+                                           P(None, TP)), 0.02),
+        "ln_f": leaf("ln_f", (d,), P(None), 1.0),
+    }
+    if not cfg.tie_embeddings:
+        t["head"] = leaf("head", (d, v), Alt(P(FS, TP), P(TP, FS),
+                                             P(TP, None)), 0.02)
+    L = (cfg.n_layers,)
+
+    if cfg.family in ("dense",):
+        t["layers"] = {**{"attn": _attn_tree(cfg, leaf, "L.attn", lead=L)},
+                       "mlp": _mlp_tree(cfg, leaf, "L.mlp", lead=L)}
+    elif cfg.family == "moe":
+        t["layers"] = {"attn": _attn_tree(cfg, leaf, "L.attn", lead=L),
+                       "moe": _moe_tree(cfg, leaf, "L.moe", lead=L)}
+    elif cfg.family == "ssm":
+        t["layers"] = {"mamba": _mamba_tree(cfg, leaf, "L.mamba", lead=L)}
+    elif cfg.family == "hybrid":
+        t["layers"] = {
+            "attn": _attn_tree(cfg, leaf, "L.attn", lead=L),
+            "mamba": _mamba_tree(cfg, leaf, "L.mamba", lead=L, gated=False),
+            "mix_a": leaf("L.mix_a", L + (d,), P(None, None), 1.0),
+            "mix_s": leaf("L.mix_s", L + (d,), P(None, None), 1.0),
+            "mlp": _mlp_tree(cfg, leaf, "L.mlp", lead=L),
+        }
+    elif cfg.family == "vlm":
+        g = cfg.n_layers // cfg.cross_attn_interval
+        t["layers"] = {"attn": _attn_tree(cfg, leaf, "L.attn",
+                                          lead=(g, cfg.cross_attn_interval - 1)),
+                       "mlp": _mlp_tree(cfg, leaf, "L.mlp",
+                                        lead=(g, cfg.cross_attn_interval - 1))}
+        t["xlayers"] = {"xattn": _attn_tree(cfg, leaf, "X.attn", ln_kv=True,
+                                            gate=True, lead=(g,)),
+                        "mlp": _mlp_tree(cfg, leaf, "X.mlp", lead=(g,)),
+                        "gate_mlp": leaf("X.gate_mlp", (g, 1), P(None, None), 0.0)}
+    elif cfg.family == "audio":
+        eL = (cfg.encoder_layers,)
+        t["enc_pos"] = leaf("enc_pos", (cfg.n_audio_frames, d),
+                            P(None, FS), 0.02)
+        t["enc_layers"] = {"attn": _attn_tree(cfg, leaf, "E.attn", lead=eL),
+                           "mlp": _mlp_tree(cfg, leaf, "E.mlp", lead=eL)}
+        t["enc_ln_f"] = leaf("enc_ln_f", (d,), P(None), 1.0)
+        t["dec_pos"] = leaf("dec_pos", (cfg.max_seq, d), P(FS, None), 0.02)
+        t["layers"] = {"attn": _attn_tree(cfg, leaf, "D.attn", lead=L),
+                       "xattn": _attn_tree(cfg, leaf, "D.xattn", ln_kv=True,
+                                           lead=L),
+                       "mlp": _mlp_tree(cfg, leaf, "D.mlp", lead=L)}
+    else:
+        raise ValueError(cfg.family)
+    return t
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _scan(cfg: ModelConfig, body, x, xs):
+    """lax.scan over stacked layer params, or an unrolled Python loop when
+    ``cfg.scan_layers`` is False (dry-run cost probes: XLA's cost_analysis
+    counts a while-loop body once, so probes unroll to get true per-layer
+    costs)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, x, xs)
+    length = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        sl = jax.tree.map(lambda a: a[i], xs)
+        x, y = body(x, sl)
+        ys.append(y)
+    if ys and ys[0] is not None and not (isinstance(ys[0], tuple) and not ys[0]):
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = ()
+    return x, ys
+
+
+def _embed(cfg: ModelConfig, params, tokens):
+    x = params["embed"].astype(cdt(cfg))[tokens]
+    return x
+
+
+def _unembed(cfg: ModelConfig, params, x):
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+
+
+def _dense_layer(cfg, pl_, x, pos, cache, window=0):
+    x, cache = attn_block(cfg, pl_["attn"], x, pos, cache, window=window)
+    x = swiglu(cfg, pl_["mlp"], x)
+    return x, cache
+
+
+def _moe_layer(cfg, pl_, x, pos, cache, mesh=None):
+    x, cache = attn_block(cfg, pl_["attn"], x, pos, cache)
+    x = moe_block(cfg, pl_["moe"], x, mesh)
+    return x, cache
+
+
+def _hybrid_layer(cfg, pl_, x, pos, cache, layer_idx, is_global):
+    """Hymba: attention heads and SSM heads in parallel on the same input."""
+    window = 0 if is_global else cfg.window
+    y = rmsnorm(x, pl_["attn"]["ln"], cfg.norm_eps)
+    # attention branch (shares pl_["attn"] projections; no inner residual)
+    b, s, _ = x.shape
+    res, attn_cache = attn_block(
+        cfg, pl_["attn"], x, pos,
+        None if cache is None else cache[0], window=window)
+    o_attn = res - x
+    # SSM branch on the same normalized input
+    o_ssm, ssm_cache = mamba2_mix(cfg, pl_["mamba"], y,
+                                  None if cache is None else cache[1],
+                                  gated=False)
+    mixed = 0.5 * (o_attn * pl_["mix_a"].astype(x.dtype)
+                   + o_ssm * pl_["mix_s"].astype(x.dtype))
+    x = x + mixed
+    x = swiglu(cfg, pl_["mlp"], x)
+    new_cache = None if cache is None else (attn_cache, ssm_cache)
+    return x, new_cache
+
+
+def forward(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray],
+            cache: Optional[Dict] = None, mesh=None):
+    """Returns (logits, new_cache).  Train/prefill when cache is None.
+
+    ``mesh`` enables sequence-parallel activation constraints (SP) on the
+    residual stream — remat-saved activations shrink by the TP degree."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    sp = P(DP, TP, None)
+    sa = (lambda t: shard_act(t, sp, mesh)) if cache is None else (lambda t: t)
+    x = sa(_embed(cfg, params, tokens))
+    if cache is None:
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        idx = None
+    else:
+        idx = cache["idx"]
+        pos = jnp.broadcast_to(idx[None, None], (b, s)).astype(jnp.int32) \
+            + jnp.arange(s, dtype=jnp.int32)[None]
+        pos = pos.reshape(b, s)
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "ssm"):
+        if cache is None:
+            def body_nc(xx, pl_):
+                if fam == "dense":
+                    xx, _ = _dense_layer(cfg, pl_, xx, pos, None)
+                elif fam == "moe":
+                    xx, _ = _moe_layer(cfg, pl_, xx, pos, None, mesh)
+                else:
+                    xx, _ = mamba_block(cfg, pl_["mamba"], xx, None)
+                return sa(xx), ()
+            body_nc = _maybe_remat(cfg, body_nc)
+            x, _ = _scan(cfg, body_nc, x, params["layers"])
+            new_cache = None
+        else:
+            if fam == "ssm":
+                c_xs = (cache["conv"], cache["h"])
+            else:
+                c_xs = (cache["k"], cache["v"])
+
+            def body_c(xx, inp):
+                pl_, c_l = inp
+                if fam == "dense":
+                    xx, c_out = _dense_layer(cfg, pl_, xx, pos,
+                                             (c_l[0], c_l[1], idx))
+                    return xx, (c_out[0], c_out[1])
+                if fam == "moe":
+                    xx, c_out = _moe_layer(cfg, pl_, xx, pos,
+                                           (c_l[0], c_l[1], idx), mesh)
+                    return xx, (c_out[0], c_out[1])
+                xx, c_out = mamba_block(cfg, pl_["mamba"], xx, c_l)
+                return xx, c_out
+
+            x, c_new = _scan(cfg, body_c, x, (params["layers"], c_xs))
+            if fam == "ssm":
+                new_cache = {"conv": c_new[0], "h": c_new[1],
+                             "idx": idx + s}
+            else:
+                new_cache = {"k": c_new[0], "v": c_new[1], "idx": idx + s}
+
+    elif fam == "hybrid":
+        L = cfg.n_layers
+        new_layer_caches = []
+        for l in range(L):
+            pl_ = jax.tree.map(lambda a: a[l], params["layers"])
+            is_global = l in cfg.global_layers
+            c_l = None if cache is None else \
+                (((cache["layers"][l][0], cache["layers"][l][1], idx),
+                  (cache["layers"][l][2], cache["layers"][l][3])))
+            if cfg.remat and cache is None:
+                x, c_out = jax.checkpoint(
+                    lambda xx, pp=pl_, gl=is_global, ll=l:
+                    _hybrid_layer(cfg, pp, xx, pos, None, ll, gl))(x)
+                x = sa(x)
+            else:
+                x, c_out = _hybrid_layer(cfg, pl_, x, pos, c_l, l, is_global)
+            if cache is not None:
+                (kc, vc, _), (conv_s, h_s) = c_out
+                new_layer_caches.append((kc, vc, conv_s, h_s))
+        new_cache = None if cache is None else \
+            {"layers": tuple(new_layer_caches), "idx": idx + s}
+
+    elif fam == "vlm":
+        img = batch["img"] if cache is None else cache["img"]
+        g = cfg.n_layers // cfg.cross_attn_interval
+        k_inner = cfg.cross_attn_interval - 1
+
+        def group(xx, inp):
+            """One group = (interval-1) self layers with a gated cross-attn
+            block (xattn + gated FFN, llama-3.2-vision style) before the
+            last self layer."""
+            pl_, px_, c_l = inp
+            outs_kv = []
+            for j in range(k_inner):
+                pj = jax.tree.map(lambda a: a[j], pl_)
+                cj = None if c_l is None else (c_l[0][j], c_l[1][j], idx)
+                if j == k_inner - 1:   # cross-attn before the last self layer
+                    xx = cross_attn_block(cfg, px_["xattn"], xx, img)
+                    gate = jnp.tanh(px_["gate_mlp"].astype(jnp.float32)
+                                    ).astype(xx.dtype)
+                    xx = xx + gate * (swiglu(cfg, px_["mlp"], xx) - xx)
+                xx, cj_out = _dense_layer(cfg, pj, xx, pos, cj)
+                if c_l is not None:
+                    outs_kv.append((cj_out[0], cj_out[1]))
+            if c_l is None:
+                return xx, ()
+            ks = jnp.stack([o[0] for o in outs_kv])
+            vs = jnp.stack([o[1] for o in outs_kv])
+            return xx, (ks, vs)
+
+        if cache is None:
+            gb = _maybe_remat(
+                cfg,
+                lambda xx, inp: (sa(group(xx, (inp[0], inp[1], None))[0]), ()))
+            x, _ = _scan(cfg, gb, x, (params["layers"], params["xlayers"]))
+            new_cache = None
+        else:
+            def g_c(xx, inp):
+                pl_, px_, c_l = inp
+                return group(xx, (pl_, px_, c_l))
+            x, kv_new = _scan(
+                cfg, g_c, x, (params["layers"], params["xlayers"],
+                              (cache["k"], cache["v"])))
+            new_cache = {"k": kv_new[0], "v": kv_new[1], "img": img,
+                         "idx": idx + s}
+
+    elif fam == "audio":
+        if cache is None:
+            enc = _encode_audio(cfg, params, batch["frames"])
+        else:
+            enc = cache["enc"]
+        x = x + params["dec_pos"].astype(x.dtype)[pos]
+
+        def dbody(xx, inp):
+            pl_, c_l = inp
+            cj = None if c_l is None else (c_l[0], c_l[1], idx)
+            xx, c_out = attn_block(cfg, pl_["attn"], xx, pos, cj,
+                                   rope_on=False)
+            xx = cross_attn_block(cfg, pl_["xattn"], xx, enc, gated=False)
+            xx = swiglu(cfg, pl_["mlp"], xx)
+            if c_l is None:
+                return xx, ()
+            return xx, (c_out[0], c_out[1])
+
+        if cache is None:
+            db = _maybe_remat(
+                cfg, lambda xx, pl_: (sa(dbody(xx, (pl_, None))[0]), ()))
+            x, _ = _scan(cfg, db, x, params["layers"])
+            new_cache = None
+        else:
+            x, kv_new = _scan(cfg, dbody, x,
+                              (params["layers"],
+                               (cache["k"], cache["v"])))
+            new_cache = {"k": kv_new[0], "v": kv_new[1], "enc": enc,
+                         "idx": idx + s}
+    else:
+        raise ValueError(fam)
+
+    logits = _unembed(cfg, params, x)
+    return logits, new_cache
+
+
+def _encode_audio(cfg: ModelConfig, params, frames):
+    """Whisper encoder over precomputed (stub) frame embeddings."""
+    b, t, _ = frames.shape
+    x = frames.astype(cdt(cfg)) + params["enc_pos"].astype(cdt(cfg))[None, :t]
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+
+    def ebody(xx, pl_):
+        xx, _ = attn_block(cfg, pl_["attn"], xx, pos, None, causal=False,
+                           rope_on=False)
+        xx = swiglu(cfg, pl_["mlp"], xx)
+        return xx, ()
+
+    eb = _maybe_remat(cfg, ebody)
+    x, _ = _scan(cfg, eb, x, params["enc_layers"])
+    return rmsnorm(x, params["enc_ln_f"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def cache_tree(cfg: ModelConfig, leaf, batch_size: int, cache_len: int):
+    """Decode-cache pytree via the leaf callback (real zeros or abstract)."""
+    L, kv, hd = cfg.n_layers, cfg.kv_heads, cfg.head_dim
+    dt = cfg.compute_dtype
+    fam = cfg.family
+    mk = lambda name, shape, spec: leaf(name, shape, spec, 0.0)
+    idx = leaf("idx", (), P(), 0.0)
+    if fam in ("dense", "moe"):
+        return {"k": mk("ck", (L, batch_size, cache_len, kv, hd),
+                        P(None, DP, None, None, None)),
+                "v": mk("cv", (L, batch_size, cache_len, kv, hd),
+                        P(None, DP, None, None, None)),
+                "idx": idx}
+    if fam == "ssm":
+        convd = cfg.d_inner + 2 * cfg.ssm_state
+        return {"conv": mk("conv", (L, batch_size, cfg.conv_width - 1, convd),
+                           P(None, DP, None, TP)),
+                "h": mk("h", (L, batch_size, cfg.n_ssm_heads, cfg.ssm_d_head,
+                              cfg.ssm_state), P(None, DP, TP, None, None)),
+                "idx": idx}
+    if fam == "hybrid":
+        convd = cfg.d_inner + 2 * cfg.ssm_state
+        layers = []
+        for l in range(L):
+            t = cache_len if l in cfg.global_layers else min(cfg.window,
+                                                             cache_len)
+            layers.append((
+                mk(f"ck{l}", (batch_size, t, kv, hd), P(DP, None, None, None)),
+                mk(f"cv{l}", (batch_size, t, kv, hd), P(DP, None, None, None)),
+                mk(f"conv{l}", (batch_size, cfg.conv_width - 1, convd),
+                   P(DP, None, TP)),
+                mk(f"h{l}", (batch_size, cfg.n_ssm_heads, cfg.ssm_d_head,
+                             cfg.ssm_state), P(DP, TP, None, None)),
+            ))
+        return {"layers": tuple(layers), "idx": idx}
+    if fam == "vlm":
+        g = cfg.n_layers // cfg.cross_attn_interval
+        k_inner = cfg.cross_attn_interval - 1
+        return {"k": mk("ck", (g, k_inner, batch_size, cache_len, kv, hd),
+                        P(None, None, DP, None, None, None)),
+                "v": mk("cv", (g, k_inner, batch_size, cache_len, kv, hd),
+                        P(None, None, DP, None, None, None)),
+                "img": mk("img", (batch_size, cfg.n_img_tokens, cfg.d_model),
+                          P(DP, None, None)),
+                "idx": idx}
+    if fam == "audio":
+        return {"k": mk("ck", (L, batch_size, cache_len, kv, hd),
+                        P(None, DP, None, None, None)),
+                "v": mk("cv", (L, batch_size, cache_len, kv, hd),
+                        P(None, DP, None, None, None)),
+                "enc": mk("enc", (batch_size, cfg.n_audio_frames, cfg.d_model),
+                          P(DP, None, None)),
+                "idx": idx}
+    raise ValueError(fam)

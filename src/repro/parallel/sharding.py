@@ -1,0 +1,93 @@
+"""Sharding utilities: resolve alias / fallback PartitionSpecs on a mesh.
+
+Model code writes specs with the alias ``DP = ("pod", "data")`` and may
+give ordered alternatives (:class:`repro.models.params.Alt`).  Resolution:
+
+1. filter alias axes down to those the mesh actually has;
+2. among ``Alt`` alternatives pick the first whose sharded dims divide the
+   array shape evenly;
+3. as a final safety net, drop (replicate) any still-non-divisible dim.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.params import Alt
+
+
+UNC = P.UNCONSTRAINED
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None or entry is UNC:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        return math.prod(mesh.shape[a] for a in entry)
+    return mesh.shape[entry]
+
+
+def _filter_alias(spec: P, mesh: Mesh) -> P:
+    names = set(mesh.axis_names)
+    out = []
+    for entry in spec:
+        if entry is None or entry is UNC:
+            out.append(entry)
+        elif isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in names)
+            out.append(kept if kept else None)
+        else:
+            out.append(entry if entry in names else None)
+    return P(*out)
+
+
+def _divides(spec: P, shape, mesh: Mesh) -> bool:
+    for dim, entry in zip(shape, spec):
+        if dim % _axis_size(mesh, entry):
+            return False
+    return True
+
+
+def _drop_bad(spec: P, shape, mesh: Mesh) -> P:
+    out = []
+    for i, entry in enumerate(spec):
+        dim = shape[i] if i < len(shape) else 1
+        out.append(entry if dim % _axis_size(mesh, entry) == 0 else None)
+    return P(*out)
+
+
+def resolve_pspec(spec, mesh: Mesh, shape=None) -> P:
+    alts = spec if isinstance(spec, Alt) else (spec,)
+    resolved = [_filter_alias(s, mesh) for s in alts]
+    if shape is not None:
+        for s in resolved:
+            if _divides(s, shape, mesh):
+                return s
+        return _drop_bad(resolved[0], shape, mesh)
+    return resolved[0]
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, (P, Alt))
+
+
+def tree_shardings(spec_tree: Any, mesh: Mesh, shape_tree: Any = None):
+    """Spec tree (+ optional matching ShapeDtypeStruct tree) -> shardings."""
+    if shape_tree is None:
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, resolve_pspec(s, mesh)),
+            spec_tree, is_leaf=_is_spec)
+    return jax.tree.map(
+        lambda s, a: NamedSharding(mesh, resolve_pspec(s, mesh, a.shape)),
+        spec_tree, shape_tree, is_leaf=_is_spec)
+
+
+def tree_pspecs_resolved(spec_tree: Any, mesh: Mesh, shape_tree: Any = None):
+    if shape_tree is None:
+        return jax.tree.map(lambda s: resolve_pspec(s, mesh), spec_tree,
+                            is_leaf=_is_spec)
+    return jax.tree.map(lambda s, a: resolve_pspec(s, mesh, a.shape),
+                        spec_tree, shape_tree, is_leaf=_is_spec)

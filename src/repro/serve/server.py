@@ -1,0 +1,99 @@
+"""Batched serving: continuous-batching decode over a fixed-size KV cache.
+
+A minimal but real serving engine: request queue -> slot allocator ->
+prefill (per request) -> batched decode steps -> detokenized streams.
+Slots map onto the batch dimension of a shared cache; finished requests
+free their slot for the next queued prompt (continuous batching).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (P,) int32
+    max_new: int = 16
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Server:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 cache_len: int = 256, temperature: float = 0.0,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.cache_len = cache_len
+        self.temperature = temperature
+        self.rng = np.random.default_rng(seed)
+        self.cache = api.init_cache(cfg, slots, cache_len)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.queue: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, c, t: api.decode_step(cfg, p, c, t))
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+        if not hasattr(self, "_all"):
+            self._all: List[Request] = []
+        self._all.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.slots):
+            if self.active[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[i] = req
+                # per-slot prefill: feed prompt tokens one step at a time
+                # (keeps a single compiled decode fn; fine for short prompts)
+                for tok in req.prompt[:-1]:
+                    t = np.zeros((self.slots, 1), np.int32)
+                    t[i, 0] = tok
+                    _, self.cache = self._decode(self.params, self.cache,
+                                                 jnp.asarray(t))
+                req._next = int(req.prompt[-1])
+
+    def step(self) -> None:
+        """One batched decode step for all active slots."""
+        self._admit()
+        if not any(self.active):
+            return
+        toks = np.zeros((self.slots, 1), np.int32)
+        for i, req in enumerate(self.active):
+            if req is not None:
+                toks[i, 0] = getattr(req, "_next", 0)
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(toks))
+        logits = np.asarray(logits, np.float32)
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            if self.temperature > 0:
+                z = logits[i] / self.temperature
+                z = z - z.max()
+                prob = np.exp(z) / np.exp(z).sum()
+                nxt = int(self.rng.choice(len(prob), p=prob))
+            else:
+                nxt = int(np.argmax(logits[i]))
+            req.out.append(nxt)
+            req._next = nxt
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self.active[i] = None   # free slot (continuous batching)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+        for _ in range(max_steps):
+            self.step()
+            if not self.queue and not any(self.active):
+                break
+        return [r for r in getattr(self, "_all", []) if r.done]

@@ -1,0 +1,54 @@
+"""Jittable train / serve steps with explicit output shardings."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.train.optim import OptConfig, OptState, apply_updates
+
+
+def make_train_step(cfg: ModelConfig, opt: OptConfig, mesh=None):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state: OptState, batch: Dict[str, Any]):
+        def loss_of(p):
+            if cfg.cast_params_bf16:
+                # one cast per step: FSDP weight all-gathers and the grad
+                # reduce-scatters at this boundary move bf16, halving the
+                # collective volume (optimizer math stays fp32)
+                p = jax.tree.map(
+                    lambda x: x.astype(jnp.bfloat16)
+                    if x.dtype == jnp.float32 else x, p)
+            return api.loss_fn(cfg, p, batch, mesh=mesh)
+
+        loss, grads = jax.value_and_grad(loss_of)(params)
+        params, opt_state, gnorm = apply_updates(opt, params, grads, opt_state)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "step": opt_state.step}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """(params, cache, tokens (B,1)) -> (logits (B,V), cache)."""
+
+    def serve_step(params, cache, tokens):
+        return api.decode_step(cfg, params, cache, tokens)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None):
+    """Inference-prefill: full forward, no cache, returns last-token logits."""
+
+    def prefill_step(params, batch):
+        logits, _ = api.forward_logits(cfg, params, batch, mesh=mesh)
+        return logits[:, -1]
+
+    return prefill_step

@@ -1,0 +1,32 @@
+"""End-to-end behaviour tests for the paper's system."""
+import numpy as np
+
+from repro.core.config import SimConfig
+from repro.core.sim import run
+from repro.core.trace import TRACE_APPS, app_trace
+
+
+def test_paper_table3_shape():
+    """Per-application statistics exist and balance (paper Table 3)."""
+    for app in TRACE_APPS:
+        cfg = SimConfig(rows=4, cols=4, addr_bits=14)
+        stats = run(cfg, app_trace(cfg, app, 25, seed=1))
+        assert stats["finished"] == 1, app
+        assert stats["req_rcvd"] == stats["req_made"] + stats["redirection"]
+        assert stats["dir_search"] > 0
+        assert stats["l1_hits"] + stats["l1_misses"] > 0
+
+
+def test_scaling_is_sublinear_per_node():
+    """The vectorized simulator's cost per node per cycle shrinks with N —
+    the paper's Fig. 6 speedup story, reproduced on one host."""
+    import time
+    times = {}
+    for rc in ((4, 4), (8, 8)):
+        cfg = SimConfig(rows=rc[0], cols=rc[1], addr_bits=14)
+        tr = app_trace(cfg, "matmul", 20, seed=1)
+        run(cfg, tr)  # warm compile for this shape
+        t0 = time.time()
+        stats = run(cfg, tr)
+        times[rc] = (time.time() - t0) / (stats["cycles"] * rc[0] * rc[1])
+    assert times[(8, 8)] < times[(4, 4)], times
