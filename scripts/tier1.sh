@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 gate: the full test suite on CPU, importable with zero network
+# access (optional deps like `hypothesis` are shimmed by tests/conftest.py,
+# so a missing package must never break *collection*).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

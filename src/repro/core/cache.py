@@ -77,10 +77,17 @@ def merge_desc(a: Desc, b: Desc) -> Desc:
                 jnp.where(pick, b.tag, a.tag))
 
 
-def dir_home_v(cfg: SimConfig, tag: jnp.ndarray) -> jnp.ndarray:
-    if cfg.centralized_directory:
-        return jnp.zeros_like(tag)
-    return jnp.where(tag >= 0, tag % cfg.num_nodes, 0)
+def dir_home_v(cfg: SimConfig, tag: jnp.ndarray,
+               central=None) -> jnp.ndarray:
+    """Home node of a directory entry.  ``central`` is the traced
+    per-scenario knob (``SimState.knob_central``); ``None`` falls back to
+    the static config (solo-run callers outside the stepped phases)."""
+    home = jnp.where(tag >= 0, tag % cfg.num_nodes, 0)
+    if central is None:
+        if cfg.centralized_directory:
+            return jnp.zeros_like(tag)
+        return home
+    return jnp.where(central > 0, jnp.zeros_like(tag), home)
 
 
 def dir_read(dir_loc: jnp.ndarray, cfg: SimConfig, tag: jnp.ndarray,
@@ -97,16 +104,18 @@ def dir_read(dir_loc: jnp.ndarray, cfg: SimConfig, tag: jnp.ndarray,
 
 def dir_write(dir_loc: jnp.ndarray, cfg: SimConfig, tag: jnp.ndarray,
               val: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    # masked-off rows are routed to the sink slot and write its current
+    # value back, so the sink stays at its initial -1 without a separate
+    # full-array reset (dir_read discards sink values via the same mask)
+    eff = mask & (tag >= 0)
     if cfg.dir_layout == "flat":
         sink = dir_loc.shape[0] - 1
-        idx = jnp.where(mask & (tag >= 0), tag, sink)
-        out = dir_loc.at[idx].set(jnp.where(mask, val, dir_loc[idx]))
-        return out.at[sink].set(-1)
+        idx = jnp.where(eff, tag, sink)
+        return dir_loc.at[idx].set(jnp.where(eff, val, dir_loc[idx]))
     row = jnp.arange(tag.shape[0], dtype=I32)
     sink = dir_loc.shape[1] - 1
-    col = jnp.where(mask & (tag >= 0), tag // cfg.num_nodes, sink)
-    out = dir_loc.at[row, col].set(jnp.where(mask, val, dir_loc[row, col]))
-    return out.at[:, sink].set(-1)
+    col = jnp.where(eff, tag // cfg.num_nodes, sink)
+    return dir_loc.at[row, col].set(jnp.where(eff, val, dir_loc[row, col]))
 
 
 # --------------------------------------------------------------------------
@@ -181,7 +190,7 @@ def install_l2(s: SimState, cfg: SimConfig, ctx: NodeCtx, mask: jnp.ndarray,
     vtag = tags[node, vic_way]
 
     # victim directory delete (S4)
-    homev = dir_home_v(cfg, vtag)
+    homev = dir_home_v(cfg, vtag, s.knob_central)
     vlocal = vic_valid & (homev == nid)
     vremote = vic_valid & ~vlocal
     cur_v = dir_read(s.dir_loc, cfg, vtag, vlocal)
@@ -201,7 +210,7 @@ def install_l2(s: SimState, cfg: SimConfig, ctx: NodeCtx, mask: jnp.ndarray,
         jnp.where(upd, 0, s.l2_streak[node, si, vic_way]))
 
     # new-owner directory update
-    homen = dir_home_v(cfg, tag2)
+    homen = dir_home_v(cfg, tag2, s.knob_central)
     nlocal = do & (homen == nid)
     nremote = do & ~nlocal
     desc_dun = Desc(nremote, jnp.full(n, MSG_DU, I32), homen, nid, tag2)
@@ -306,8 +315,10 @@ def commit_queue(s: SimState, cfg: SimConfig, descs: List[Desc]):
     pos = jnp.stack([(s.q_head + q_size + o) % qp for o in offs], axis=1)
     pos = jnp.where(acc, pos, qp)                       # sink slot
     row = jnp.stack(rows, axis=1)                       # (N, D, 6)
+    # rejected rows land in the sink slot (index qp); it is never read —
+    # injection only indexes q_head % qp — so it is left dirty on purpose
+    # (zeroing it cost a full q_desc rewrite per commit)
     q_desc = s.q_desc.at[node[:, None], pos].set(row)
-    q_desc = q_desc.at[:, qp].set(0)                    # keep the sink clean
     stats = bump(s.stats, "send_drop", drops)
     return s._replace(q_desc=q_desc, q_size=q_size + off,
                       pkt_ctr=pkt_ctr + off, stats=stats)
@@ -369,7 +380,7 @@ def phase1a(s: SimState, cfg: SimConfig, ctx: NodeCtx) -> SimState:
     stats = bump(stats, "reply_sent", req_hit)
     d0 = merge_desc(d0, Desc(req_hit, jnp.full(n, MSG_RA, I32), osrc, osrc, tag))
 
-    mig_ok = (req_hit & cfg.migration_enabled & (osrc != nid)
+    mig_ok = (req_hit & (s.knob_mig > 0) & (osrc != nid)
               & (l2_mig[node, si, hw] == 0))
     streak_new = jnp.where(l2_last[node, si, hw] == osrc,
                            l2_streak[node, si, hw] + 1, 1)
@@ -377,7 +388,7 @@ def phase1a(s: SimState, cfg: SimConfig, ctx: NodeCtx) -> SimState:
         jnp.where(mig_ok, osrc, l2_last[node, si, hw]))
     l2_streak = l2_streak.at[node, si, hw].set(
         jnp.where(mig_ok, streak_new, l2_streak[node, si, hw]))
-    trig = mig_ok & (streak_new >= cfg.migrate_threshold)
+    trig = mig_ok & (streak_new >= s.knob_mig_thr)
     l2_mig = l2_mig.at[node, si, hw].set(
         jnp.where(trig, 1, l2_mig[node, si, hw]))
     d1 = merge_desc(d1, Desc(trig, jnp.full(n, MSG_B2, I32), osrc, nid, tag))
@@ -572,7 +583,7 @@ def phase1b(s: SimState, cfg: SimConfig, ctx: NodeCtx) -> SimState:
     st = jnp.where(l2hit, ST_L2_WAIT, st)
     ctr = jnp.where(l2hit, cfg.l2_hit_cycles, ctr)
 
-    home = dir_home_v(cfg, tag2)
+    home = dir_home_v(cfg, tag2, s.knob_central)
     inline = l2miss & (home == nid)           # S8
     remote = l2miss & ~inline
     stats = bump(stats, "dir_search", inline)

@@ -15,6 +15,7 @@ the simulated network itself (no extra collectives).
 from __future__ import annotations
 
 import functools
+import inspect
 from typing import Sequence, Tuple
 
 import jax
@@ -23,17 +24,30 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .cache import phase1a, phase1b
-from .config import ST_DONE, SimConfig
+from .config import SimConfig
 from .noc import deliver, phase2
 from .ref_serial import STAT_NAMES
+from .sim import finished as _finished
 from .state import (
-    F_VALID,
     NUM_F,
     NodeCtx,
     SimState,
     init_state,
     make_geometry,
 )
+
+# jax >= 0.5 exports shard_map at the top level; 0.4.x keeps it in
+# experimental.  The replication-check kwarg was also renamed
+# (check_rep -> check_vma); stats leave the tile replicated but become
+# device-varying inside the scan (re-replicated via psum), so the check
+# must be off either way.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+_SM_NOCHECK = {
+    ("check_vma" if "check_vma" in inspect.signature(_shard_map).parameters
+     else "check_rep"): False}
 
 I32 = jnp.int32
 
@@ -65,10 +79,11 @@ def state_specs(cfg: SimConfig, row_axes, col_axes) -> SimState:
 
 
 def _halo_transfer(out4: jnp.ndarray, vp4: jnp.ndarray,
-                   row_axes, col_axes) -> jnp.ndarray:
-    """Phase-3 transfer for one (Rt, Ct, 4, F) tile with ppermute halos."""
-    nrow = jax.lax.axis_size(row_axes)
-    ncol = jax.lax.axis_size(col_axes)
+                   row_axes, col_axes, nrow: int, ncol: int) -> jnp.ndarray:
+    """Phase-3 transfer for one (Rt, Ct, 4, F) tile with ppermute halos.
+
+    ``nrow``/``ncol`` are the static tile-grid sizes (taken from the mesh
+    by the caller — ``jax.lax.axis_size`` is unavailable on jax 0.4.x)."""
     perm_dn = [(i, (i + 1) % nrow) for i in range(nrow)]
     perm_up = [(i, (i - 1) % nrow) for i in range(nrow)]
     perm_rt = [(i, (i + 1) % ncol) for i in range(ncol)]
@@ -107,14 +122,12 @@ def make_sharded_step(cfg: SimConfig, mesh,
     gspec = (P(row_axes, col_axes), P(row_axes, col_axes),
              P(row_axes, col_axes), P(row_axes, col_axes))
     all_axes = tuple(row_axes) + tuple(col_axes)
+    nrow = int(np.prod([mesh.shape[a] for a in row_axes]))
+    ncol = int(np.prod([mesh.shape[a] for a in col_axes]))
 
-    def tile_finished(s) -> jnp.ndarray:
-        done = jnp.all(s.st == ST_DONE)
-        net = ~jnp.any(s.inp[..., F_VALID] > 0)
-        q = jnp.all(s.q_size == 0)
-        rob = jnp.all(s.rob[..., 5] == 0)
-        pc = jnp.all(s.pc[..., 0] == 0)
-        return done & net & q & rob & pc
+    # sim.finished reduces over every axis when `cycle` is scalar, so it
+    # serves unchanged as the tile-local termination predicate
+    tile_finished = _finished
 
     def one_cycle(flat: SimState, ctx: NodeCtx, rt: int, ct: int) -> SimState:
         s = phase1a(flat, cfg, ctx)
@@ -122,7 +135,7 @@ def make_sharded_step(cfg: SimConfig, mesh,
         s, arb = phase2(s, cfg, ctx)
         out4 = arb.out.reshape(rt, ct, 4, NUM_F)
         vp4 = ctx.valid_port.reshape(rt, ct, 4)
-        inp_next = _halo_transfer(out4, vp4, row_axes, col_axes)
+        inp_next = _halo_transfer(out4, vp4, row_axes, col_axes, nrow, ncol)
         s = deliver(s, cfg, ctx, arb, inp_next.reshape(rt * ct, 4, NUM_F))
         return s._replace(cycle=s.cycle + 1)
 
@@ -143,11 +156,10 @@ def make_sharded_step(cfg: SimConfig, mesh,
                 for k, v in s._asdict().items()})
 
         flat = flat_of(s2d)
+        # stats start replicated but accumulate device-local sums inside
+        # the scan; the psum below re-replicates the delta (the shard_map
+        # replication check is disabled for exactly this carry)
         in_stats = flat.stats
-        # stats start replicated but accumulate device-local sums inside the
-        # scan; mark them varying for the carry (re-replicated via psum below)
-        flat = flat._replace(
-            stats=jax.lax.pcast(flat.stats, all_axes, to="varying"))
 
         ndev = jax.lax.psum(jnp.ones((), I32), all_axes)
 
@@ -168,11 +180,12 @@ def make_sharded_step(cfg: SimConfig, mesh,
 
     def build(n_cycles: int):
         if n_cycles not in cache:
-            smapped = jax.shard_map(
+            smapped = _shard_map(
                 functools.partial(step_tile, n_cycles),
                 mesh=mesh,
                 in_specs=(sspec,) + gspec,
                 out_specs=sspec,
+                **_SM_NOCHECK,
             )
             cache[n_cycles] = jax.jit(smapped)
         return cache[n_cycles]
@@ -217,12 +230,7 @@ class ShardedSim:
 
     @staticmethod
     def _finished_fn(s: SimState) -> jnp.ndarray:
-        done = jnp.all(s.st == ST_DONE)
-        net = ~jnp.any(s.inp[..., F_VALID] > 0)
-        q = jnp.all(s.q_size == 0)
-        rob = jnp.all(s.rob[..., 5] == 0)
-        pc = jnp.all(s.pc[..., 0] == 0)
-        return done & net & q & rob & pc
+        return _finished(s)
 
     def run(self, max_cycles=None, chunk: int = 256):
         limit = max_cycles or self.cfg.max_cycles

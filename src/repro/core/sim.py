@@ -21,8 +21,8 @@ from .config import ST_DONE, SimConfig
 from .cache import phase1a, phase1b
 from .noc import phase2, phase3
 from .ref_serial import STAT_NAMES
-from .state import (F_VALID, Geometry, NodeCtx, SimState, init_state,
-                    make_geometry, make_node_ctx)
+from .state import (F_VALID, P_VALID, R_NFL, Geometry, NodeCtx, SimState,
+                    init_state, make_geometry, make_node_ctx)
 
 __all__ = ["cycle_step", "finished", "run", "VectorSim"]
 
@@ -38,22 +38,80 @@ def cycle_step(s: SimState, cfg: SimConfig, geo: Geometry,
 
 
 def finished(s: SimState) -> jnp.ndarray:
-    done = jnp.all(s.st == ST_DONE)
-    net_empty = ~jnp.any(s.inp[:, :, F_VALID] > 0)
-    q_empty = jnp.all(s.q_size == 0)
-    rob_empty = jnp.all(s.rob[:, :, 5] == 0)   # R_NFL
-    pc_empty = jnp.all(s.pc[:, 0] == 0)
+    """Termination predicate.  Scalar for a solo state; ``(B,)`` for a
+    batched sweep state (reductions run over everything but the leading
+    scenario axis)."""
+    b = s.cycle.ndim                       # 0 solo, 1 batched
+    tail = lambda x: tuple(range(b, x.ndim))
+    done = jnp.all(s.st == ST_DONE, axis=tail(s.st))
+    net_in = s.inp[..., F_VALID] > 0
+    net_empty = ~jnp.any(net_in, axis=tail(net_in))
+    q_empty = jnp.all(s.q_size == 0, axis=tail(s.q_size))
+    rob_nfl = s.rob[..., R_NFL]
+    rob_empty = jnp.all(rob_nfl == 0, axis=tail(rob_nfl))
+    pc_v = s.pc[..., P_VALID]
+    pc_empty = jnp.all(pc_v == 0, axis=tail(pc_v))
     return done & net_empty & q_empty & rob_empty & pc_empty
 
 
 @functools.partial(jax.jit, static_argnums=(1, 3))
 def _run_jit(s: SimState, cfg: SimConfig, max_cycles: jnp.ndarray,
              chunk: int) -> SimState:
-    def cond(st):
-        return (~finished(st)) & (st.cycle < max_cycles)
+    """Drive a solo OR batched state to completion in one compiled loop.
+
+    Batched (leading scenario axis): ``cycle_step`` is vmapped and every
+    scenario terminates independently.  A finished scenario is NOT
+    frozen with a full-state select — stepping a finished state is a
+    semantic no-op on every leaf except the clock (all phase masks are
+    false and every statistic bump is zero), and keeping the pre-step
+    state alive for a freeze select would block XLA's in-place reuse of
+    every large buffer in the loop carry.  Instead the loop records each
+    scenario's finish cycle and rewrites the per-scenario ``cycle`` leaf
+    at the end, so the returned state is bit-identical to B solo runs.
+    """
+    batched = s.cycle.ndim == 1
 
     geo = make_geometry(cfg.rows, cfg.cols)
     ctx = make_node_ctx(cfg)
+
+    if batched:
+        vstep = jax.vmap(lambda st: cycle_step(st, cfg, geo, ctx))
+
+        def step(c):
+            st, done = c
+            nxt = vstep(st)
+            fin = finished(nxt)
+            done = jnp.where((done < 0) & fin, nxt.cycle, done)
+            return nxt, done
+
+        carry = (s, jnp.full(s.cycle.shape, -1, jnp.int32))
+        if chunk > 1:
+            # main loop: whole chunks with NO per-cycle branch (a per-step
+            # lax.cond guard costs carry copies); the loop condition keeps
+            # whole chunks from overstepping the cycle cap
+            def chunk_cond(c):
+                st, done = c
+                return jnp.any(done < 0) & (st.cycle[0] + chunk <= max_cycles)
+
+            def chunk_body(c):
+                c, _ = jax.lax.scan(lambda cc, _: (step(cc), ()), c,
+                                    None, length=chunk)
+                return c
+
+            carry = jax.lax.while_loop(chunk_cond, chunk_body, carry)
+
+        # tail: per-cycle, so an unfinished scenario stops at exactly
+        # max_cycles just like a solo run
+        def tail_cond(c):
+            st, done = c
+            return jnp.any(done < 0) & (st.cycle[0] < max_cycles)
+
+        fs, done = jax.lax.while_loop(tail_cond, step, carry)
+        # finished scenarios kept no-op stepping; restore their true clock
+        return fs._replace(cycle=jnp.where(done >= 0, done, fs.cycle))
+
+    def cond(st):
+        return (~finished(st)) & (st.cycle < max_cycles)
 
     def body(st):
         return cycle_step(st, cfg, geo, ctx)

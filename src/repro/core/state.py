@@ -78,6 +78,12 @@ class SimState(NamedTuple):
     cycle: jnp.ndarray       # () int32
     # workload (read-only during sim)
     trace: jnp.ndarray       # (N, M)
+    # policy knobs as traced scalars so a batched sweep (repro.core.sweep)
+    # can vary them per scenario inside ONE compiled program; initialized
+    # from SimConfig so solo runs are unchanged.
+    knob_mig: jnp.ndarray      # () int32 — migration enabled?
+    knob_mig_thr: jnp.ndarray  # () int32 — migration streak threshold
+    knob_central: jnp.ndarray  # () int32 — centralized directory?
 
 
 class Geometry(NamedTuple):
@@ -133,12 +139,25 @@ def dir_shape(cfg: SimConfig) -> Tuple[int, ...]:
 
 
 def init_state(cfg: SimConfig, trace: np.ndarray) -> SimState:
+    """Build the initial state.
+
+    ``trace`` is ``(num_nodes, M)`` for a solo run, or ``(B, num_nodes, M)``
+    for a batched sweep — every leaf then carries the same leading scenario
+    axis ``B`` (see :mod:`repro.core.sweep`).
+    """
     cfg.validate()
+    trace = np.asarray(trace)
+    if trace.ndim not in (2, 3) or trace.shape[-2] != cfg.num_nodes:
+        raise ValueError(
+            f"trace must be (num_nodes, M) or (B, num_nodes, M) with "
+            f"num_nodes={cfg.num_nodes}, got shape {trace.shape}")
+    batch = trace.shape[:-2]
     n = cfg.num_nodes
     ca = cfg.cache
     i32 = jnp.int32
-    z = lambda *s: jnp.zeros(s, i32)
-    neg = lambda *s: jnp.full(s, -1, i32)
+    z = lambda *s: jnp.zeros(batch + s, i32)
+    neg = lambda *s: jnp.full(batch + s, -1, i32)
+    knob = lambda v: jnp.full(batch, v, i32)
     return SimState(
         st=z(n), ctr=z(n), tr_ptr=z(n), pend_addr=neg(n), install_mode=z(n),
         pkt_ctr=z(n), lru_clock=z(n),
@@ -150,7 +169,7 @@ def init_state(cfg: SimConfig, trace: np.ndarray) -> SimState:
         l2_mig=z(n, ca.l2_sets, ca.l2_ways),
         l2_last=neg(n, ca.l2_sets, ca.l2_ways),
         l2_streak=z(n, ca.l2_sets, ca.l2_ways),
-        dir_loc=jnp.full(dir_shape(cfg), -1, i32),
+        dir_loc=jnp.full(batch + dir_shape(cfg), -1, i32),
         fwd_tag=neg(n, cfg.fwd_entries), fwd_dst=neg(n, cfg.fwd_entries),
         fwd_ptr=z(n),
         inp=z(n, NUM_PORTS, NUM_F),
@@ -158,9 +177,12 @@ def init_state(cfg: SimConfig, trace: np.ndarray) -> SimState:
         q_head=z(n), q_size=z(n), q_fid=z(n),
         rob=z(n, cfg.rob_slots, NUM_R),
         pc=z(n, NUM_P),
-        stats=jnp.zeros(NUM_STATS, i32),
-        cycle=jnp.zeros((), i32),
+        stats=z(NUM_STATS),
+        cycle=z(),
         trace=jnp.asarray(trace, i32),
+        knob_mig=knob(int(cfg.migration_enabled)),
+        knob_mig_thr=knob(cfg.migrate_threshold),
+        knob_central=knob(int(cfg.centralized_directory)),
     )
 
 

@@ -1,0 +1,182 @@
+"""Batched multi-scenario sweep engine: B simulations, one XLA program.
+
+The paper's headline metric is simulation *throughput*, and every real
+evaluation of a deflection network sweeps scenarios — applications,
+injection seeds, policy knobs.  ``run_sweep`` vmaps the fused
+``cycle_step``/``while_loop`` driver over a leading scenario axis so B
+independent simulations of the same mesh shape execute as ONE compiled
+program: one trace/compile and one dispatched device loop instead of B
+recompile-and-dispatch round trips.  Per-scenario termination masks
+freeze early finishers bit-identically to a solo :func:`repro.core.sim.run`
+(a frozen scenario undergoes exactly the cycle steps its solo while loop
+would have), so mixed-length scenarios coexist in one batch.
+
+What may vary per scenario:
+  * the workload — app / seed / refs-per-core (stacked, ``-1``-padded
+    traces, see :func:`repro.core.trace.stacked_traces`);
+  * traced policy knobs carried in state (``SimState.knob_*``):
+    migration on/off, migration threshold, centralized vs distributed
+    directory.
+
+What must be shared (it changes array shapes or compiled structure):
+mesh size, cache geometry, latencies, ``dir_layout``, queue/ROB depths —
+these come from the sweep-wide ``SweepSpec.cfg``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from .config import SimConfig
+from .ref_serial import STAT_NAMES
+from .sim import _run_jit, finished, run
+from .state import SimState, init_state
+from .trace import stacked_traces
+
+__all__ = ["ScenarioSpec", "SweepSpec", "run_sweep", "run_sequential"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """One scenario of a sweep: a workload plus optional policy knobs.
+
+    ``None`` knobs inherit the sweep-wide :class:`SimConfig` value."""
+
+    app: str = "matmul"            # TRACE_APPS name or "random"
+    seed: int = 0
+    refs_per_core: int = 200
+    migration_enabled: Optional[bool] = None
+    migrate_threshold: Optional[int] = None
+    centralized_directory: Optional[bool] = None
+
+    def resolve_cfg(self, cfg: SimConfig) -> SimConfig:
+        """This scenario's effective SimConfig (the sequential path runs
+        a solo simulation with exactly this config)."""
+        kw = {}
+        if self.migration_enabled is not None:
+            kw["migration_enabled"] = self.migration_enabled
+        if self.migrate_threshold is not None:
+            kw["migrate_threshold"] = self.migrate_threshold
+        if self.centralized_directory is not None:
+            kw["centralized_directory"] = self.centralized_directory
+        return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """A batch of scenarios over one shared mesh/cache/latency config."""
+
+    cfg: SimConfig
+    scenarios: Tuple[ScenarioSpec, ...]
+
+    @classmethod
+    def cross(cls, cfg: SimConfig, apps: Sequence[str],
+              seeds: Sequence[int], refs_per_core: int = 200) -> "SweepSpec":
+        """Cross-product sweep: every app with every seed."""
+        return cls(cfg, tuple(ScenarioSpec(a, int(s), refs_per_core)
+                              for a in apps for s in seeds))
+
+    @property
+    def size(self) -> int:
+        return len(self.scenarios)
+
+    def validate(self) -> None:
+        if not self.scenarios:
+            raise ValueError("empty sweep")
+        for sc in self.scenarios:
+            rc = sc.resolve_cfg(self.cfg)
+            rc.validate()
+            if self.cfg.dir_layout == "home" and rc.centralized_directory:
+                raise ValueError(
+                    "home-sharded directory layout cannot batch a "
+                    f"centralized-directory scenario: {sc}")
+
+    @functools.cached_property
+    def _traces(self) -> np.ndarray:
+        return stacked_traces(
+            self.cfg,
+            [(sc.app, sc.seed, sc.refs_per_core) for sc in self.scenarios])
+
+    def traces(self) -> np.ndarray:
+        """Stacked ``(B, num_nodes, M)`` workload block (synthesized once
+        per spec — trace generation is python-loop setup cost, not part
+        of the engine)."""
+        return self._traces
+
+    def knob_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Per-scenario (migration, threshold, centralized) int32 vectors."""
+        res = [sc.resolve_cfg(self.cfg) for sc in self.scenarios]
+        mig = np.asarray([int(c.migration_enabled) for c in res], np.int32)
+        thr = np.asarray([c.migrate_threshold for c in res], np.int32)
+        cen = np.asarray([int(c.centralized_directory) for c in res], np.int32)
+        return mig, thr, cen
+
+
+def _stats_dict(stats_row: np.ndarray, cycles: int, fin: bool) -> Dict[str, int]:
+    out = {k: int(v) for k, v in zip(STAT_NAMES, stats_row)}
+    out["cycles"] = int(cycles)
+    out["finished"] = int(fin)
+    return out
+
+
+def _maybe_shard(s: SimState, batch: int) -> SimState:
+    """Shard the scenario axis over the local devices.
+
+    The batch is embarrassingly parallel (the only cross-scenario ops are
+    tiny boolean any-reductions in the loop conditions), so placing
+    B/n scenarios on each of n devices runs them concurrently inside the
+    single compiled program.  On CPU, expose the cores as devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=<n>`` before
+    importing jax; with one device this is a no-op and results are
+    bit-identical either way (integer ops, no cross-scenario math).
+    """
+    devs = jax.local_devices()
+    n = min(len(devs), batch)
+    while n > 1 and batch % n:
+        n -= 1
+    if n <= 1:
+        return s
+    mesh = Mesh(np.asarray(devs[:n]), ("scenario",))
+    sh = NamedSharding(mesh, PartitionSpec("scenario"))
+    return jax.tree.map(lambda x: jax.device_put(x, sh), s)
+
+
+def run_sweep(spec: SweepSpec, max_cycles: Optional[int] = None,
+              chunk: int = 1) -> List[Dict[str, int]]:
+    """Run all scenarios of ``spec`` in one jitted batched loop.
+
+    Returns one stats dict per scenario, in scenario order, bit-identical
+    to what a solo ``run(sc.resolve_cfg(cfg), trace)`` would produce.
+    """
+    spec.validate()
+    cfg = spec.cfg
+    s = init_state(cfg, spec.traces())
+    mig, thr, cen = spec.knob_arrays()
+    s = s._replace(knob_mig=jnp.asarray(mig),
+                   knob_mig_thr=jnp.asarray(thr),
+                   knob_central=jnp.asarray(cen))
+    s = _maybe_shard(s, spec.size)
+    s = _run_jit(s, cfg, jnp.asarray(max_cycles or cfg.max_cycles, jnp.int32),
+                 chunk)
+    stats = np.asarray(s.stats)
+    cycles = np.asarray(s.cycle)
+    fins = np.asarray(finished(s))
+    return [_stats_dict(stats[b], cycles[b], bool(fins[b]))
+            for b in range(spec.size)]
+
+
+def run_sequential(spec: SweepSpec, max_cycles: Optional[int] = None,
+                   chunk: int = 1) -> List[Dict[str, int]]:
+    """Reference path: one solo ``run()`` per scenario (B device loop
+    dispatches; B compiles when knobs differ).  Used by the throughput
+    benchmark and the bit-exactness tests."""
+    spec.validate()
+    traces = spec.traces()
+    return [run(sc.resolve_cfg(spec.cfg), traces[b], max_cycles, chunk)
+            for b, sc in enumerate(spec.scenarios)]

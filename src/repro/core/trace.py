@@ -21,6 +21,7 @@ __all__ = [
     "app_trace",
     "random_trace",
     "from_model_schedule",
+    "stacked_traces",
     "TRACE_APPS",
 ]
 
@@ -92,6 +93,33 @@ def app_trace(cfg: SimConfig, app: str, refs_per_core: int = 200, seed: int = 0)
                 a = cursor
             out[node, i] = a % addr_space
     return out.astype(np.int32)
+
+
+def stacked_traces(cfg: SimConfig, specs, default_refs: int = 200) -> np.ndarray:
+    """Stack per-scenario traces into one ``(B, num_nodes, M)`` block for
+    the batched sweep engine (:mod:`repro.core.sweep`).
+
+    ``specs`` is an iterable of ``(app, seed)`` or ``(app, seed,
+    refs_per_core)`` tuples, where ``app`` is a :data:`TRACE_APPS` name or
+    ``"random"``.  Scenarios with fewer references are right-padded with
+    ``-1`` — the trace-exhaustion sentinel — which is semantically
+    identical to running them unpadded, so scenarios of different lengths
+    can share one batch.
+    """
+    mats = []
+    for sp in specs:
+        app, seed = sp[0], sp[1]
+        refs = sp[2] if len(sp) > 2 else default_refs
+        t = (random_trace(cfg, refs, seed) if app == "random"
+             else app_trace(cfg, app, refs, seed))
+        mats.append(t)
+    if not mats:
+        raise ValueError("stacked_traces needs at least one scenario")
+    m = max(t.shape[1] for t in mats)
+    out = np.full((len(mats), cfg.num_nodes, m), -1, np.int32)
+    for b, t in enumerate(mats):
+        out[b, :, : t.shape[1]] = t
+    return out
 
 
 def random_trace(cfg: SimConfig, refs_per_core: int = 200, seed: int = 0) -> np.ndarray:

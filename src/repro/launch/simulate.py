@@ -2,6 +2,8 @@
 
     PYTHONPATH=src python -m repro.launch.simulate --rows 16 --cols 16 \
         --app matmul --refs 100
+Batched multi-scenario sweep (one compiled program for all scenarios):
+    ... --sweep --apps matmul,equake,mgrid --seeds 0,1
 Multi-device:
     ... --sharded   (tiles the simulated mesh over jax.devices())
 """
@@ -9,6 +11,8 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
 
 import numpy as np
@@ -30,6 +34,15 @@ def main() -> None:
     ap.add_argument("--serial", action="store_true",
                     help="run the golden-model serial simulator instead")
     ap.add_argument("--sharded", action="store_true")
+    ap.add_argument("--sweep", action="store_true",
+                    help="batched sweep: run apps x seeds scenarios in one "
+                         "compiled program (repro.core.sweep)")
+    ap.add_argument("--apps", default=None,
+                    help="comma list of apps for --sweep (default: --app)")
+    ap.add_argument("--seeds", default=None,
+                    help="comma list of seeds for --sweep (default: --seed)")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="simulated cycles per device-loop termination check")
     ap.add_argument("--max-cycles", type=int, default=200_000)
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
@@ -39,6 +52,43 @@ def main() -> None:
                     dir_layout="home" if args.sharded else "flat",
                     migration_enabled=not args.no_migration,
                     max_cycles=args.max_cycles)
+
+    if args.sweep and (args.sharded or args.serial):
+        ap.error("--sweep cannot be combined with --sharded or --serial "
+                 "(the sweep engine batches the vectorized simulator; "
+                 "spatial sharding of sweeps is a ROADMAP item)")
+
+    if args.sweep:
+        # expose the cores as XLA host devices so the sweep shards its
+        # scenario axis across them (must precede the first jax import)
+        if "jax" not in sys.modules \
+                and "--xla_force_host_platform_device_count" \
+                not in os.environ.get("XLA_FLAGS", ""):
+            os.environ["XLA_FLAGS"] = (
+                os.environ.get("XLA_FLAGS", "")
+                + f" --xla_force_host_platform_device_count={os.cpu_count()}")
+        from repro.core.sweep import SweepSpec, run_sweep
+        apps = (args.apps or args.app).split(",")
+        seeds = [int(x) for x in (args.seeds or str(args.seed)).split(",")]
+        spec = SweepSpec.cross(cfg, apps, seeds, args.refs)
+        t0 = time.time()
+        per_scenario = run_sweep(spec, chunk=args.chunk)
+        dt = time.time() - t0
+        payload = {
+            "scenarios": [
+                {"app": sc.app, "seed": sc.seed, **st}
+                for sc, st in zip(spec.scenarios, per_scenario)],
+            "n_scenarios": spec.size,
+            "nodes": cfg.num_nodes,
+            "wall_s": round(dt, 2),
+            "scenarios_per_sec": round(spec.size / dt, 3),
+        }
+        print(json.dumps(payload, indent=1))
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(payload, f)
+        return
+
     tr = (random_trace(cfg, args.refs, args.seed) if args.app == "random"
           else app_trace(cfg, args.app, args.refs, args.seed))
 
@@ -61,7 +111,7 @@ def main() -> None:
         stats = ShardedSim(cfg, tr, mesh).run()
     else:
         from repro.core.sim import run
-        stats = run(cfg, tr, chunk=8)
+        stats = run(cfg, tr, chunk=args.chunk)
     dt = time.time() - t0
 
     stats["wall_s"] = round(dt, 2)

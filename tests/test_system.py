@@ -19,14 +19,24 @@ def test_paper_table3_shape():
 
 def test_scaling_is_sublinear_per_node():
     """The vectorized simulator's cost per node per cycle shrinks with N —
-    the paper's Fig. 6 speedup story, reproduced on one host."""
+    the paper's Fig. 6 speedup story, reproduced on one host.
+
+    Wall-clock assertions flake on loaded CI runners, so measure where the
+    effect is unambiguous: a 16x span of mesh sizes (4x4 vs 16x16), a
+    chunked device loop (dispatch overhead otherwise dominates the small
+    mesh), an unsaturated distributed directory, best-of-three timing, and
+    a generous threshold (observed ratio is ~0.4; assert < 0.8)."""
     import time
     times = {}
-    for rc in ((4, 4), (8, 8)):
-        cfg = SimConfig(rows=rc[0], cols=rc[1], addr_bits=14)
-        tr = app_trace(cfg, "matmul", 20, seed=1)
-        run(cfg, tr)  # warm compile for this shape
-        t0 = time.time()
-        stats = run(cfg, tr)
-        times[rc] = (time.time() - t0) / (stats["cycles"] * rc[0] * rc[1])
-    assert times[(8, 8)] < times[(4, 4)], times
+    for rc in ((4, 4), (16, 16)):
+        cfg = SimConfig(rows=rc[0], cols=rc[1], centralized_directory=False)
+        tr = app_trace(cfg, "equake", 25, seed=1)
+        run(cfg, tr, chunk=8)  # warm compile for this shape
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.time()
+            stats = run(cfg, tr, chunk=8)
+            best = min(best, time.time() - t0)
+        assert stats["finished"] == 1, rc
+        times[rc] = best / (stats["cycles"] * rc[0] * rc[1])
+    assert times[(16, 16)] < times[(4, 4)] * 0.8, times
