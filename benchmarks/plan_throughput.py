@@ -1,0 +1,145 @@
+"""Execution-plan benchmarks: vectorized trace synthesis + planned sweeps.
+
+    PYTHONPATH=src python benchmarks/plan_throughput.py
+
+Part 1 — trace synthesis at scale (the ROADMAP ">100k-core trace synthesis
+dominates sweep setup" item): times the vectorized ``app_trace`` at the
+target mesh (default 256x256 = 65,536 cores) against the historical
+per-node-loop generator ``app_trace_loop`` (timed at a smaller mesh and
+extrapolated linearly — the loop *is* linear in nodes — unless
+``--full-loop`` is given), and reports trace synthesis as a fraction of
+end-to-end setup (synthesis + state init).
+
+Part 2 — planned mixed-shape sweep: a manifest mixing two mesh shapes runs
+through ``compile_plan``/``execute_plan`` (one compiled program per shape
+bucket) vs the same scenarios as sequential solo ``run()`` calls, with a
+bit-exactness cross-check, so no speedup is ever bought with wrong numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from repro.core import engine                              # noqa: E402
+
+engine.expose_host_devices()   # before anything imports jax
+
+from repro.core.config import SimConfig                    # noqa: E402
+from repro.core.sim import run                             # noqa: E402
+from repro.core.state import init_state                    # noqa: E402
+from repro.core.trace import (                             # noqa: E402
+    app_trace, app_trace_loop, random_trace)
+
+
+def bench_trace(args) -> dict:
+    cfg = SimConfig(rows=args.trace_rows, cols=args.trace_cols,
+                    centralized_directory=False)
+    t0 = time.time()
+    tr = app_trace(cfg, args.trace_app, args.trace_refs, seed=0)
+    vec_s = time.time() - t0
+
+    t0 = time.time()
+    s = init_state(cfg, tr)
+    s.st.block_until_ready()
+    init_s = time.time() - t0
+
+    if args.full_loop:
+        loop_cfg, scale = cfg, 1.0
+    else:
+        loop_cfg = SimConfig(rows=args.loop_rows, cols=args.loop_cols,
+                             centralized_directory=False)
+        scale = cfg.num_nodes / loop_cfg.num_nodes
+    t0 = time.time()
+    app_trace_loop(loop_cfg, args.trace_app, args.trace_refs, seed=0)
+    loop_s = (time.time() - t0) * scale
+
+    return {
+        "nodes": cfg.num_nodes,
+        "refs_per_core": args.trace_refs,
+        "vectorized_synth_s": round(vec_s, 3),
+        "loop_synth_s" + ("" if args.full_loop else "_extrapolated"):
+            round(loop_s, 3),
+        "synth_speedup": round(loop_s / vec_s, 1),
+        "state_init_s": round(init_s, 3),
+        "trace_fraction_of_setup": round(vec_s / (vec_s + init_s), 3),
+        "loop_trace_fraction_of_setup": round(loop_s / (loop_s + init_s), 3),
+    }
+
+
+def bench_plan(args) -> dict:
+    base = SimConfig(centralized_directory=False, max_cycles=args.max_cycles)
+    seeds = range(args.seeds_per_shape)
+    scenarios = [engine.make_scenario(base, r, c, args.app, s, args.refs)
+                 for (r, c) in ((args.rows_a, args.cols_a),
+                                (args.rows_b, args.cols_b))
+                 for s in seeds]
+
+    t0 = time.time()
+    ref = []
+    for sc in scenarios:
+        tr = (random_trace(sc.cfg, sc.refs_per_core, sc.seed)
+              if sc.app == "random"
+              else app_trace(sc.cfg, sc.app, sc.refs_per_core, sc.seed))
+        ref.append(run(sc.cfg, tr, chunk=args.chunk))
+    seq_s = time.time() - t0
+
+    plan = engine.compile_plan(scenarios)
+    t0 = time.time()
+    got = engine.execute_plan(plan, chunk=args.chunk)
+    plan_s = time.time() - t0
+    mismatches = [i for i, (a, b) in enumerate(zip(ref, got)) if a != b]
+
+    return {
+        "plan": plan.describe(),
+        "n_scenarios": len(scenarios),
+        "bit_identical": not mismatches,
+        "mismatched_scenarios": mismatches,
+        "sequential_s": round(seq_s, 2),
+        "planned_s": round(plan_s, 2),
+        "speedup": round(seq_s / plan_s, 2),
+        "all_finished": all(r.get("finished") for r in got),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace-rows", type=int, default=256)
+    ap.add_argument("--trace-cols", type=int, default=256)
+    ap.add_argument("--trace-refs", type=int, default=200)
+    ap.add_argument("--trace-app", default="matmul")
+    ap.add_argument("--loop-rows", type=int, default=64)
+    ap.add_argument("--loop-cols", type=int, default=64)
+    ap.add_argument("--full-loop", action="store_true",
+                    help="time the loop generator at the full target mesh "
+                         "instead of extrapolating from --loop-rows/cols")
+    ap.add_argument("--skip-plan", action="store_true")
+    ap.add_argument("--rows-a", type=int, default=8)
+    ap.add_argument("--cols-a", type=int, default=8)
+    ap.add_argument("--rows-b", type=int, default=16)
+    ap.add_argument("--cols-b", type=int, default=16)
+    ap.add_argument("--seeds-per-shape", type=int, default=3)
+    ap.add_argument("--app", default="equake",
+                    help="equake/refs=25 is verified deadlock-free at 16x16")
+    ap.add_argument("--refs", type=int, default=25)
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--max-cycles", type=int, default=20_000)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    payload = {"trace_synthesis": bench_trace(args)}
+    if not args.skip_plan:
+        payload["planned_sweep"] = bench_plan(args)
+    print(json.dumps(payload, indent=1))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payload, f)
+    if not args.skip_plan and payload["planned_sweep"]["mismatched_scenarios"]:
+        raise SystemExit("planned sweep diverged from sequential runs")
+
+
+if __name__ == "__main__":
+    main()

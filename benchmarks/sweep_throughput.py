@@ -30,18 +30,17 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
-import os
 import sys
 import time
+
+sys.path.insert(0, "src")
 
 # expose every core as an XLA host device BEFORE jax loads: run_sweep
 # shards the scenario axis across them, so the one compiled program fills
 # the machine (the sequential baseline keeps its usual single device)
-os.environ["XLA_FLAGS"] = (
-    os.environ.get("XLA_FLAGS", "")
-    + f" --xla_force_host_platform_device_count={os.cpu_count()}")
+from repro.core.engine import expose_host_devices          # noqa: E402
 
-sys.path.insert(0, "src")
+expose_host_devices()
 
 from repro.core.config import SimConfig                    # noqa: E402
 from repro.core.sweep import (                             # noqa: E402

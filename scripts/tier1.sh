@@ -2,7 +2,16 @@
 # Tier-1 gate: the full test suite on CPU, importable with zero network
 # access (optional deps like `hypothesis` are shimmed by tests/conftest.py,
 # so a missing package must never break *collection*).
+#
+# The default collection includes the execution-plan layer's modules —
+# tests/test_engine.py (planner: bucketing, cost model, --plan CLI),
+# tests/test_trace_vec.py (vectorized trace synthesis parity) and
+# tests/test_detectors.py (livelock/saturation monitors) — and this guard
+# fails fast if any of them stops being collected.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+for mod in tests/test_engine.py tests/test_trace_vec.py tests/test_detectors.py; do
+  [[ -f "$mod" ]] || { echo "tier1: missing $mod" >&2; exit 1; }
+done
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

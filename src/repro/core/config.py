@@ -8,7 +8,7 @@ message types, packet lengths (paper Table 1) and latency/geometry knobs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Message types (paper Table 1 + control messages implied by §3.3/§3.4).
@@ -104,6 +104,23 @@ class SimConfig:
     send_queue: int = 64        # outbound flit-queue depth per node
     max_cycles: int = 200_000
 
+    # Progress monitors (driver-level, repro.core.sim).  They never alter
+    # the cycle-by-cycle semantics of a healthy run — they only stop a run
+    # early with a diagnostic instead of burning the whole cycle budget.
+    #
+    # Livelock: abort when no *progress* statistic (anything but the
+    # pure-motion counters hops/deflections) changes for this many
+    # consecutive cycles while the run is unfinished.  None = auto
+    # (max(512, 4*mem_cycles) — comfortably above the longest legitimate
+    # quiet period, a machine-wide off-chip memory stall); 0 disables.
+    livelock_window: Optional[int] = None
+    # Directory saturation (the paper's node-0 hotspot): evaluated every
+    # sat_window cycles on centralized-directory runs at >= 256 nodes;
+    # fires when at least half the nodes sit in WAIT_DIR/WAIT_DATA while
+    # fewer than num_nodes/2 references retired over the window.
+    # 0 disables.
+    sat_window: int = 1024
+
     # Simulator implementation knobs (do not change semantics).
     flit_dtype: str = "int32"
     dir_layout: str = "flat"   # "flat" | "home" (home = sharded with nodes)
@@ -112,6 +129,12 @@ class SimConfig:
     @property
     def num_nodes(self) -> int:
         return self.rows * self.cols
+
+    @property
+    def livelock_window_effective(self) -> int:
+        if self.livelock_window is None:
+            return max(512, 4 * self.mem_cycles)
+        return self.livelock_window
 
     @property
     def dir_entries(self) -> int:

@@ -1,0 +1,423 @@
+"""Unified execution-plan layer: one engine behind run / sweep / sharded.
+
+A *plan* turns a heterogeneous list of :class:`Scenario` — any mix of mesh
+shapes, apps, seeds and policy knobs — into the minimal set of device
+programs:
+
+1. **Bucket** scenarios by structural configuration: everything that
+   changes array shapes or compiled structure (mesh shape, cache geometry,
+   latencies, directory layout, queue/ROB depths, cycle budget).  Policy
+   knobs (migration on/off, migrate threshold, centralized vs distributed
+   directory) are *traced* per-scenario state in the batched driver, so
+   they never split a bucket — scenarios that differ only in workload or
+   knobs share ONE compiled program.
+2. **Choose a backend per bucket** with a cost model over
+   ``(batch, nodes, devices)``:
+
+   * ``sweep`` — the vmapped batched driver (:mod:`repro.core.sweep`),
+     scenario axis sharded over local devices.  A batch of one is the
+     classic solo run; both ride the same compiled loop.
+   * ``sharded`` — the 2-D spatial ``shard_map`` decomposition
+     (:mod:`repro.core.sharded`), for a single huge scenario whose node
+     grid is worth splitting across devices.  The device grid is factored
+     automatically (:func:`choose_tiling`); on one device, or when no
+     factoring divides the mesh, the plan falls back to ``sweep`` instead
+     of asserting.
+
+3. **Execute** buckets sequentially (each is one compiled program) and
+   reassemble per-scenario statistics in the original scenario order —
+   bit-identical to running each scenario through a solo
+   :func:`repro.core.sim.run`.
+
+Manifests: :func:`load_manifest` accepts a JSON object/list (or a path to
+one), or the compact CLI grammar ``ROWSxCOLS:APP:SEED[:REFS]`` joined with
+``;`` or ``,``::
+
+    {"base": {"addr_bits": 16, "centralized_directory": false},
+     "scenarios": [
+       {"rows": 8,  "cols": 8,  "app": "matmul", "seed": 0, "refs_per_core": 50},
+       {"rows": 16, "cols": 16, "app": "equake", "seed": 1,
+        "migration_enabled": false}]}
+
+This layer is the architectural precondition for the ROADMAP's
+scenario x row x col device-mesh composition: scenario-parallel and
+space-parallel execution are now two backends behind one planner.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .config import CacheConfig, SimConfig
+from .trace import TRACE_APPS
+
+__all__ = [
+    "Scenario", "Bucket", "ExecutionPlan", "make_scenario", "bucket_key",
+    "choose_tiling", "backend_cost", "choose_backend", "compile_plan",
+    "execute_plan", "plan_and_run", "load_manifest", "expose_host_devices",
+]
+
+
+def expose_host_devices() -> None:
+    """Expose CPU cores as XLA host devices so the sweep backend can shard
+    the scenario axis.  Must run before the first jax import; a no-op when
+    the flag is already set (so explicit user pins win) or jax is loaded."""
+    import sys
+    if "jax" not in sys.modules \
+            and "--xla_force_host_platform_device_count" \
+            not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={os.cpu_count()}")
+
+#: SimConfig fields carried as traced per-scenario state by the batched
+#: driver (SimState.knob_*) — these never force a new bucket/compile.
+KNOB_FIELDS = ("migration_enabled", "migrate_threshold",
+               "centralized_directory")
+_KNOB_NORM = dict(migration_enabled=True, migrate_threshold=3,
+                  centralized_directory=False)
+
+# Cost model constants (driver work per simulated cycle, in node-units).
+#: relative per-node cost of a sharded tile vs the dense single-device
+#: step: halo ppermutes + the global-termination psum.
+HALO_OVERHEAD = 1.25
+#: fixed per-cycle cost of the sharded backend's collectives (latency-
+#: bound, independent of tile size) — keeps small meshes off shard_map.
+SHARD_FIXED = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One unit of work for the planner: a fully-resolved config plus a
+    workload.  ``cfg`` carries everything, including policy knobs; the
+    planner decides what is structural and what is traced."""
+
+    cfg: SimConfig
+    app: str = "matmul"            # TRACE_APPS name or "random"
+    seed: int = 0
+    refs_per_core: int = 200
+
+    def validate(self) -> None:
+        self.cfg.validate()
+        if self.app != "random" and self.app not in TRACE_APPS:
+            raise ValueError(f"unknown app {self.app!r}; choose from "
+                             f"{sorted(TRACE_APPS)} or 'random'")
+        if self.refs_per_core < 1:
+            raise ValueError("refs_per_core must be >= 1")
+
+
+def make_scenario(base: SimConfig, rows: Optional[int] = None,
+                  cols: Optional[int] = None, app: str = "matmul",
+                  seed: int = 0, refs_per_core: int = 200,
+                  **overrides) -> Scenario:
+    """Scenario constructor: ``base`` config + shape + any SimConfig
+    overrides (structural or knob — the planner sorts out which)."""
+    kw = dict(overrides)
+    if rows is not None:
+        kw["rows"] = rows
+    if cols is not None:
+        kw["cols"] = cols
+    cfg = dataclasses.replace(base, **kw) if kw else base
+    return Scenario(cfg=cfg, app=app, seed=seed, refs_per_core=refs_per_core)
+
+
+def bucket_key(cfg: SimConfig) -> SimConfig:
+    """Structural identity of a config: the config with every traced knob
+    normalized away.  Two scenarios with equal keys share one compiled
+    program."""
+    return dataclasses.replace(cfg, **_KNOB_NORM)
+
+
+def choose_tiling(rows: int, cols: int, ndev: int) -> Tuple[int, int]:
+    """Factor the device count into a ``(row_tiles, col_tiles)`` grid that
+    divides the simulated mesh, using as many devices as possible and
+    preferring near-square tilings (halo perimeter ~ rt+ct).  Returns
+    ``(1, 1)`` when nothing but a single device fits — the planner then
+    falls back to the dense backend instead of asserting."""
+    best = (1, 1)
+    for d in range(min(ndev, rows * cols), 1, -1):
+        cands = [(rt, d // rt) for rt in range(1, d + 1)
+                 if d % rt == 0 and rows % rt == 0 and cols % (d // rt) == 0]
+        if cands:
+            return min(cands, key=lambda t: abs(t[0] - t[1]))
+    return best
+
+
+def backend_cost(backend: str, batch: int, nodes: int, ndev: int,
+                 tiles: Tuple[int, int] = (1, 1)) -> float:
+    """Estimated driver work per simulated cycle, in node-units on the
+    critical path (lower is better)."""
+    if backend == "sweep":
+        # deferred import: sweep pulls in jax, which plan compilation with
+        # an explicit ndev otherwise never needs
+        from .sweep import scenario_device_count
+        # run_sweep pads the batch to a multiple of the device count, so
+        # wall-clock work is ceil(batch / devices) scenario-steps
+        n = scenario_device_count(batch, ndev)
+        return nodes * -(-batch // n)
+    if backend == "sharded":
+        nt = tiles[0] * tiles[1]
+        if batch != 1 or nt <= 1:
+            return float("inf")
+        return nodes / nt * HALO_OVERHEAD + SHARD_FIXED
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def choose_backend(cfg: SimConfig, batch: int, ndev: int,
+                   force: Optional[str] = None
+                   ) -> Tuple[str, Tuple[int, int], str]:
+    """Pick ``(backend, tiles, note)`` for one bucket.
+
+    ``force`` pins the backend (CLI ``--sharded`` / ``--sweep``); a forced
+    ``sharded`` that is structurally impossible (one device, centralized
+    directory, batch > 1, or an indivisible mesh) degrades to ``sweep``
+    with an explanatory note instead of asserting."""
+    tiles = choose_tiling(cfg.rows, cfg.cols, ndev)
+    eligible = (batch == 1 and not cfg.centralized_directory
+                and tiles != (1, 1))
+    if force == "sweep":
+        return "sweep", (1, 1), "forced"
+    if force == "sharded":
+        if eligible:
+            return "sharded", tiles, "forced"
+        why = ("batch > 1" if batch > 1
+               else "centralized directory" if cfg.centralized_directory
+               else f"no device tiling divides {cfg.rows}x{cfg.cols} "
+                    f"over {ndev} device(s)")
+        return "sweep", (1, 1), f"sharded unavailable ({why}); fell back"
+    if force is not None:
+        raise ValueError(f"unknown backend {force!r}")
+    c_sweep = backend_cost("sweep", batch, cfg.num_nodes, ndev)
+    if eligible:
+        c_shard = backend_cost("sharded", batch, cfg.num_nodes, ndev, tiles)
+        if c_shard < c_sweep:
+            return "sharded", tiles, (f"cost {c_shard:.0f} < sweep "
+                                      f"{c_sweep:.0f}")
+    return "sweep", (1, 1), ""
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """Scenarios sharing one structural config → one compiled program."""
+
+    cfg: SimConfig                     # structural (knob-normalized) config
+    scenarios: Tuple[Scenario, ...]
+    indices: Tuple[int, ...]           # positions in the original list
+    backend: str                       # "sweep" | "sharded"
+    tiles: Tuple[int, int] = (1, 1)
+    note: str = ""
+
+    @property
+    def batch(self) -> int:
+        return len(self.scenarios)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    scenarios: Tuple[Scenario, ...]
+    buckets: Tuple[Bucket, ...]
+    ndev: int
+
+    def describe(self) -> Dict:
+        return {
+            "n_scenarios": len(self.scenarios),
+            "n_buckets": len(self.buckets),
+            "devices": self.ndev,
+            "buckets": [{
+                "rows": b.cfg.rows, "cols": b.cfg.cols, "batch": b.batch,
+                "backend": b.backend,
+                **({"tiles": list(b.tiles)} if b.backend == "sharded" else {}),
+                **({"note": b.note} if b.note else {}),
+            } for b in self.buckets],
+        }
+
+
+def compile_plan(scenarios: Sequence[Scenario], ndev: Optional[int] = None,
+                 force_backend: Optional[str] = None) -> ExecutionPlan:
+    """Bucket scenarios by structural config and choose each bucket's
+    backend.  Deterministic: bucket order follows first appearance in
+    ``scenarios``; per-bucket scenario order follows the input order."""
+    if not scenarios:
+        raise ValueError("empty plan")
+    for sc in scenarios:
+        sc.validate()
+    if ndev is None:
+        import jax
+        ndev = len(jax.local_devices())
+
+    groups: Dict[SimConfig, List[int]] = {}
+    for i, sc in enumerate(scenarios):
+        groups.setdefault(bucket_key(sc.cfg), []).append(i)
+
+    buckets = []
+    for key, idxs in groups.items():
+        scs = tuple(scenarios[i] for i in idxs)
+        # the knob check must see the *scenario* configs, not the
+        # normalized key: forced-sharded eligibility depends on them
+        any_central = any(sc.cfg.centralized_directory for sc in scs)
+        probe = dataclasses.replace(key, centralized_directory=any_central)
+        backend, tiles, note = choose_backend(probe, len(scs), ndev,
+                                              force_backend)
+        buckets.append(Bucket(cfg=key, scenarios=scs, indices=tuple(idxs),
+                              backend=backend, tiles=tiles, note=note))
+    return ExecutionPlan(tuple(scenarios), tuple(buckets), ndev)
+
+
+def _run_bucket_sweep(b: Bucket, max_cycles: Optional[int],
+                      chunk: int) -> List[Dict[str, int]]:
+    from .sweep import ScenarioSpec, SweepSpec, run_sweep
+    spec = SweepSpec(b.cfg, tuple(
+        ScenarioSpec(
+            app=sc.app, seed=sc.seed, refs_per_core=sc.refs_per_core,
+            migration_enabled=sc.cfg.migration_enabled,
+            migrate_threshold=sc.cfg.migrate_threshold,
+            centralized_directory=sc.cfg.centralized_directory,
+        ) for sc in b.scenarios))
+    return run_sweep(spec, max_cycles=max_cycles, chunk=chunk)
+
+
+def _run_bucket_sharded(b: Bucket, max_cycles: Optional[int],
+                        sharded_chunk: int) -> List[Dict[str, int]]:
+    import jax
+    from jax.sharding import Mesh
+    from .sharded import ShardedSim
+    from .trace import app_trace, random_trace
+    (sc,) = b.scenarios
+    cfg = dataclasses.replace(sc.cfg, dir_layout="home")
+    tr = (random_trace(cfg, sc.refs_per_core, sc.seed) if sc.app == "random"
+          else app_trace(cfg, sc.app, sc.refs_per_core, sc.seed))
+    rt, ct = b.tiles
+    devs = np.asarray(jax.devices()[: rt * ct]).reshape(rt, ct)
+    mesh = Mesh(devs, ("data", "model"))
+    return [ShardedSim(cfg, tr, mesh).run(max_cycles, chunk=sharded_chunk)]
+
+
+def execute_plan(plan: ExecutionPlan, max_cycles: Optional[int] = None,
+                 chunk: int = 8, sharded_chunk: int = 256
+                 ) -> List[Dict[str, int]]:
+    """Run every bucket (one compiled program each) and return one stats
+    dict per scenario, in the original scenario order."""
+    out: List[Optional[Dict[str, int]]] = [None] * len(plan.scenarios)
+    for b in plan.buckets:
+        if b.backend == "sharded":
+            # the plan may have been compiled for a different ndev than
+            # this process actually has; degrade to the dense backend
+            # rather than crash on a short device list
+            import jax
+            if len(jax.devices()) >= b.tiles[0] * b.tiles[1]:
+                res = _run_bucket_sharded(b, max_cycles, sharded_chunk)
+            else:
+                res = _run_bucket_sweep(b, max_cycles, chunk)
+        else:
+            res = _run_bucket_sweep(b, max_cycles, chunk)
+        for i, r in zip(b.indices, res):
+            out[i] = r
+    return out  # type: ignore[return-value]
+
+
+def plan_and_run(scenarios: Sequence[Scenario],
+                 max_cycles: Optional[int] = None, chunk: int = 8,
+                 force_backend: Optional[str] = None,
+                 ndev: Optional[int] = None) -> List[Dict[str, int]]:
+    """Convenience: compile + execute in one call."""
+    return execute_plan(compile_plan(scenarios, ndev, force_backend),
+                        max_cycles=max_cycles, chunk=chunk)
+
+
+# ---------------------------------------------------------------------------
+# Manifests
+# ---------------------------------------------------------------------------
+
+_WORKLOAD_KEYS = ("app", "seed", "refs_per_core", "refs")
+
+
+def _scenario_from_entry(entry: Dict, base: SimConfig) -> Scenario:
+    e = dict(entry)
+    app = e.pop("app", "matmul")
+    seed = int(e.pop("seed", 0))
+    refs_long = e.pop("refs_per_core", None)
+    refs_short = e.pop("refs", None)
+    if refs_long is not None and refs_short is not None:
+        raise ValueError(f"scenario {entry} sets both 'refs_per_core' and "
+                         "'refs'; use one")
+    refs = int(refs_long if refs_long is not None
+               else refs_short if refs_short is not None else 200)
+    cache = e.pop("cache", None)
+    if cache is not None:
+        base = dataclasses.replace(base, cache=CacheConfig(**cache))
+    bad = [k for k in e if k not in SimConfig.__dataclass_fields__]
+    if bad:
+        raise ValueError(f"unknown scenario key(s) {bad}; workload keys are "
+                         f"{_WORKLOAD_KEYS}, everything else must be a "
+                         f"SimConfig field")
+    cfg = dataclasses.replace(base, **e) if e else base
+    return Scenario(cfg=cfg, app=app, seed=seed, refs_per_core=refs)
+
+
+def _parse_compact(text: str, base: SimConfig) -> List[Scenario]:
+    """``ROWSxCOLS:APP:SEED[:REFS]`` items joined with ``;`` or ``,``."""
+    out = []
+    for item in text.replace(";", ",").split(","):
+        item = item.strip()
+        if not item:
+            continue
+        parts = item.split(":")
+        try:
+            rows, cols = (int(x) for x in parts[0].lower().split("x"))
+        except ValueError:
+            raise ValueError(
+                f"bad compact scenario {item!r}; expected "
+                "ROWSxCOLS:APP:SEED[:REFS] (or a path to an existing "
+                "JSON manifest)") from None
+        if len(parts) > 4:
+            raise ValueError(f"compact scenario {item!r} has "
+                             f"{len(parts) - 1} fields; only "
+                             "APP:SEED:REFS follow ROWSxCOLS")
+        app = parts[1] if len(parts) > 1 else "matmul"
+        seed = int(parts[2]) if len(parts) > 2 else 0
+        refs = int(parts[3]) if len(parts) > 3 else 200
+        out.append(make_scenario(base, rows, cols, app, seed, refs))
+    if not out:
+        raise ValueError("empty compact scenario list")
+    return out
+
+
+def load_manifest(src: Union[str, Dict, List],
+                  base: Optional[SimConfig] = None) -> List[Scenario]:
+    """Load scenarios from a manifest.
+
+    ``src`` may be a dict (``{"base": {...}, "scenarios": [...]}``), a bare
+    list of scenario dicts, a JSON string of either, a path to a JSON file,
+    or the compact CLI grammar (see :func:`_parse_compact`)."""
+    base = base or SimConfig()
+    obj: Union[Dict, List]
+    if isinstance(src, str):
+        text = src.strip()
+        if text.startswith("{") or text.startswith("["):
+            obj = json.loads(text)
+        elif os.path.exists(src):
+            with open(src) as f:
+                obj = json.load(f)
+        elif text.endswith(".json") or os.sep in text:
+            # clearly a file path, not the compact grammar: fail as one
+            raise FileNotFoundError(f"manifest file not found: {src}")
+        else:
+            return _parse_compact(text, base)
+    else:
+        obj = src
+    if isinstance(obj, list):
+        obj = {"scenarios": obj}
+    base_kw = dict(obj.get("base", {}))
+    cache = base_kw.pop("cache", None)
+    if cache is not None:
+        base = dataclasses.replace(base, cache=CacheConfig(**cache))
+    if base_kw:
+        base = dataclasses.replace(base, **base_kw)
+    entries = obj.get("scenarios")
+    if not entries:
+        raise ValueError("manifest has no scenarios")
+    return [_scenario_from_entry(e, base) for e in entries]

@@ -653,10 +653,56 @@ class SerialSim:
         self.cycle += 1
 
     def run(self, max_cycles: Optional[int] = None) -> Dict[str, int]:
+        """Drive to completion, with the same livelock / directory-
+        saturation monitors as the vectorized driver (`sim._run_jit`) —
+        the golden-model equivalence contract covers pathological inputs
+        too, so both sides must abort at the same cycle with the same
+        snapshot (the stats ARE the snapshot: they were frozen / sampled
+        at the fire cycle)."""
         limit = max_cycles or self.cfg.max_cycles
+        n = self.cfg.num_nodes
+        lw = self.cfg.livelock_window_effective
+        sw = self.cfg.sat_window if n >= 256 else 0
+        central = self.cfg.centralized_directory
+
+        def prog():
+            return tuple(v for k, v in self.stats.items()
+                         if k not in ("hops", "deflections"))
+
+        prev, frz = prog(), 0
+        refs_anchor = int(self.tr_ptr.sum())
+        abort = ""
         while not self.finished() and self.cycle < limit:
             self.step()
+            cur = prog()
+            frz = frz + 1 if cur == prev else 0
+            prev = cur
+            fin = self.finished()
+            fire_sat = False
+            if sw and self.cycle % sw == 0:
+                refs = int(self.tr_ptr.sum())
+                wd = int((self.st == ST_WAIT_DIR).sum())
+                wdd = int((self.st == ST_WAIT_DATA).sum())
+                fire_sat = (not fin and central and (wd + wdd) * 2 >= n
+                            and (refs - refs_anchor) * 2 < n)
+                refs_anchor = refs
+            if fire_sat:
+                abort = "dir_saturation"
+                break
+            if lw and frz >= lw and not fin:
+                abort = "livelock"
+                break
         out = dict(self.stats)
         out["cycles"] = self.cycle
-        out["finished"] = int(self.finished())
+        if abort:
+            out["finished"] = 0
+            out["aborted"] = abort
+            flits = [f for ports in self.inp for f in ports if f is not None]
+            out["circulating_flits"] = len(flits)
+            out["wait_dir_nodes"] = int((self.st == ST_WAIT_DIR).sum())
+            out["wait_data_nodes"] = int((self.st == ST_WAIT_DATA).sum())
+            out["stalled_queues"] = sum(1 for q in self.sendq if q)
+            out["flits_to_node0"] = sum(1 for f in flits if f.dst == 0)
+        else:
+            out["finished"] = int(self.finished())
         return out

@@ -24,11 +24,13 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .cache import phase1a, phase1b
-from .config import SimConfig
+from .config import ST_WAIT_DATA, ST_WAIT_DIR, SimConfig
 from .noc import deliver, phase2
-from .ref_serial import STAT_NAMES
-from .sim import finished as _finished
+from .sim import (ABORT_LIVELOCK, ExecAux, _PROG_IDX, finished as _finished,
+                  stats_list)
 from .state import (
+    F_DST,
+    F_VALID,
     NUM_F,
     NodeCtx,
     SimState,
@@ -233,14 +235,50 @@ class ShardedSim:
         return _finished(s)
 
     def run(self, max_cycles=None, chunk: int = 256):
+        """Host-chunked driver.  Shares the driver-level termination and
+        statistics machinery with :mod:`repro.core.sim` — including the
+        livelock monitor, evaluated between chunks at host level (chunk
+        granularity: progress must be absent across whole chunks, a
+        strictly conservative version of the per-cycle in-graph monitor)."""
         limit = max_cycles or self.cfg.max_cycles
-        step = self.build_step(chunk)
-        while int(self.state.cycle) < limit:
-            self.state = step(self.state, *self.geo)
+        lw = self.cfg.livelock_window_effective
+        prev_prog, frozen, abort = None, 0, 0
+        while True:
+            cyc = int(self.state.cycle)
+            if cyc >= limit:
+                break
+            # clamp the last chunk so an unfinished run stops at exactly
+            # max_cycles, matching the dense backend bit-for-bit (the
+            # shorter tail program compiles once and is cached)
+            n_step = min(chunk, limit - cyc)
+            self.state = self.build_step(n_step)(self.state, *self.geo)
             if bool(self._finished(self.state)):
                 break
-        stats = np.asarray(self.state.stats)
-        out = {k: int(v) for k, v in zip(STAT_NAMES, stats)}
-        out["cycles"] = int(self.state.cycle)
-        out["finished"] = int(bool(self._finished(self.state)))
-        return out
+            prog = tuple(np.asarray(self.state.stats)[_PROG_IDX].tolist())
+            if prog == prev_prog:
+                frozen += n_step
+            else:
+                prev_prog, frozen = prog, 0
+            if lw and frozen >= lw:
+                abort = ABORT_LIVELOCK
+                break
+        s = self.state
+        z = np.int32(0)
+        if abort:
+            inp = np.asarray(s.inp)                  # (R, C, 4, F)
+            st = np.asarray(s.st)
+            valid = inp[..., F_VALID] > 0
+            aux = ExecAux(
+                abort=np.int32(abort),
+                abort_cycle=np.asarray(s.cycle, np.int32),
+                abort_stats=np.asarray(s.stats),
+                circ=np.int32(valid.sum()),
+                wait_dir=np.int32((st == ST_WAIT_DIR).sum()),
+                wait_data=np.int32((st == ST_WAIT_DATA).sum()),
+                stalled=np.int32((np.asarray(s.q_size) > 0).sum()),
+                dst0=np.int32((valid & (inp[..., F_DST] == 0)).sum()),
+            )
+        else:
+            aux = ExecAux(z, z, np.zeros_like(np.asarray(s.stats)),
+                          z, z, z, z, z)
+        return stats_list(s, aux)[0]

@@ -5,26 +5,88 @@ The serial version's
     while not finished: Phase1(all); Phase2(all); Phase3(all)
 
 and the GPU version's three-kernel loop both become a single jitted
-``cycle_step`` (phases fused by XLA) inside ``lax.while_loop`` — the
-CUDA grid barrier between kernels is simply the dataflow between phases.
+``cycle_step`` (phases fused by XLA) inside ``lax.while_loop``.
+
+There is ONE driver, :func:`_run_jit`, and it is batched: a solo ``run``
+is the batch-of-1 special case of the sweep, so solo runs, batched sweeps
+(:mod:`repro.core.sweep`) and the execution-plan layer
+(:mod:`repro.core.engine`) all share the same loop, termination predicate,
+progress monitors and statistics collection.
+
+Progress monitors (carried inside the compiled loop, per scenario):
+
+* **Livelock** — no *progress* statistic (anything but the pure-motion
+  counters ``hops``/``deflections``) changes for
+  ``cfg.livelock_window_effective`` consecutive cycles while the scenario
+  is unfinished.  This catches the S14 backpressure/ejection-bar cycles
+  catalogued in ROADMAP (flits keep circulating — hops keep rising — but
+  nothing retires) without burning ``max_cycles``.
+* **Directory saturation** — on centralized-directory scenarios at >= 256
+  nodes, evaluated every ``cfg.sat_window`` cycles: at least half the
+  nodes sit in WAIT_DIR/WAIT_DATA while fewer than ``num_nodes/2``
+  references retired over the window (the paper's node-0 hotspot).
+
+A monitor never changes the cycle-by-cycle semantics of a healthy run —
+it only stops early, snapshotting the statistics and a diagnostic
+(circulating flits, wait-state counts, node-0 pressure) at the abort
+cycle, so aborted results are independent of when the loop actually
+exits.
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional
+from typing import Dict, List, NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .config import ST_DONE, SimConfig
+from .config import ST_DONE, ST_WAIT_DATA, ST_WAIT_DIR, SimConfig
 from .cache import phase1a, phase1b
 from .noc import phase2, phase3
 from .ref_serial import STAT_NAMES
-from .state import (F_VALID, P_VALID, R_NFL, Geometry, NodeCtx, SimState,
-                    init_state, make_geometry, make_node_ctx)
+from .state import (F_DST, F_VALID, P_VALID, R_NFL, Geometry, NodeCtx,
+                    SimState, init_state, make_geometry, make_node_ctx)
 
-__all__ = ["cycle_step", "finished", "run", "VectorSim"]
+__all__ = ["cycle_step", "finished", "run", "stats_list", "ExecAux",
+           "VectorSim", "ABORT_LABELS"]
+
+I32 = jnp.int32
+
+#: statistics that witness forward progress.  hops/deflections are excluded:
+#: they keep rising while flits merely circulate, which is exactly the
+#: livelock signature the monitor must see *through*.
+_PROG_IDX = np.asarray([i for i, k in enumerate(STAT_NAMES)
+                        if k not in ("hops", "deflections")])
+
+ABORT_NONE, ABORT_LIVELOCK, ABORT_SATURATION = 0, 1, 2
+ABORT_LABELS = {ABORT_LIVELOCK: "livelock", ABORT_SATURATION: "dir_saturation"}
+_SAT_MIN_NODES = 256
+
+
+class ExecAux(NamedTuple):
+    """Per-scenario abort record returned by the driver next to the state.
+
+    All leaves are ``(B,)`` (or ``()`` for a solo run) except
+    ``abort_stats`` which is ``(B, NUM_STATS)``.  ``abort == 0`` means the
+    scenario ran to completion or to ``max_cycles`` untouched; the
+    remaining fields are then zero and ignored."""
+
+    abort: jnp.ndarray        # 0 none | 1 livelock | 2 dir saturation
+    abort_cycle: jnp.ndarray
+    abort_stats: jnp.ndarray  # stats snapshot at the abort cycle
+    circ: jnp.ndarray         # circulating (in-flight) flits at abort
+    wait_dir: jnp.ndarray     # nodes in WAIT_DIR at abort
+    wait_data: jnp.ndarray    # nodes in WAIT_DATA at abort
+    stalled: jnp.ndarray      # nodes with a backlogged send queue at abort
+    dst0: jnp.ndarray         # in-flight flits destined to node 0 at abort
+
+
+class _Mon(NamedTuple):
+    prev_prog: jnp.ndarray    # (B, P) progress stats last cycle
+    frz: jnp.ndarray          # (B,) consecutive frozen cycles
+    refs_anchor: jnp.ndarray  # (B,) sum(tr_ptr) at the last window edge
+    aux: ExecAux
 
 
 def cycle_step(s: SimState, cfg: SimConfig, geo: Geometry,
@@ -54,94 +116,201 @@ def finished(s: SimState) -> jnp.ndarray:
     return done & net_empty & q_empty & rob_empty & pc_empty
 
 
-@functools.partial(jax.jit, static_argnums=(1, 3))
-def _run_jit(s: SimState, cfg: SimConfig, max_cycles: jnp.ndarray,
-             chunk: int) -> SimState:
-    """Drive a solo OR batched state to completion in one compiled loop.
+def _mon_init(s: SimState) -> _Mon:
+    zb = jnp.zeros(s.cycle.shape, I32)
+    aux = ExecAux(abort=zb, abort_cycle=zb,
+                  abort_stats=jnp.zeros_like(s.stats),
+                  circ=zb, wait_dir=zb, wait_data=zb, stalled=zb, dst0=zb)
+    return _Mon(prev_prog=s.stats[..., _PROG_IDX], frz=zb,
+                refs_anchor=jnp.sum(s.tr_ptr, axis=-1), aux=aux)
 
-    Batched (leading scenario axis): ``cycle_step`` is vmapped and every
-    scenario terminates independently.  A finished scenario is NOT
-    frozen with a full-state select — stepping a finished state is a
-    semantic no-op on every leaf except the clock (all phase masks are
-    false and every statistic bump is zero), and keeping the pre-step
-    state alive for a freeze select would block XLA's in-place reuse of
-    every large buffer in the loop carry.  Instead the loop records each
-    scenario's finish cycle and rewrites the per-scenario ``cycle`` leaf
-    at the end, so the returned state is bit-identical to B solo runs.
+
+def _mon_update(mon: _Mon, st: SimState, active: jnp.ndarray,
+                cfg: SimConfig) -> _Mon:
+    """Advance the livelock/saturation monitors one cycle (batched).
+
+    Per-cycle cost is kept to the (B, P) progress-stat compare: the O(N)
+    saturation reductions run only at ``sat_window`` edges and the O(N)
+    diagnostic snapshot only on the (at most one) cycle a monitor fires —
+    both behind ``lax.cond`` (their outputs are scalars per scenario, so
+    the carry-copy concern that rules out a per-step cond around the main
+    loop body does not apply)."""
+    n = cfg.num_nodes
+    lw = cfg.livelock_window_effective
+    sw = cfg.sat_window if n >= _SAT_MIN_NODES else 0
+
+    prog = st.stats[:, _PROG_IDX]
+    frz = jnp.where(jnp.all(prog == mon.prev_prog, axis=-1), mon.frz + 1, 0)
+    fire_lv = (active & (frz >= lw)) if lw > 0 \
+        else jnp.zeros_like(active)
+
+    if sw > 0:
+        at_edge = (st.cycle % sw) == 0       # one clock: all-or-none
+
+        def sat_eval(_):
+            refs = jnp.sum(st.tr_ptr, axis=-1)
+            wd = jnp.sum((st.st == ST_WAIT_DIR).astype(I32), axis=-1)
+            wdd = jnp.sum((st.st == ST_WAIT_DATA).astype(I32), axis=-1)
+            fire = (active & at_edge & (st.knob_central > 0)
+                    & ((wd + wdd) * 2 >= n)
+                    & ((refs - mon.refs_anchor) * 2 < n))
+            return fire, jnp.where(at_edge, refs, mon.refs_anchor)
+
+        fire_sat, refs_anchor = jax.lax.cond(
+            jnp.any(at_edge), sat_eval,
+            lambda _: (jnp.zeros_like(active), mon.refs_anchor), None)
+    else:
+        fire_sat = jnp.zeros_like(active)
+        refs_anchor = mon.refs_anchor
+    fire_lv = fire_lv & ~fire_sat      # saturation is the sharper diagnosis
+    fire = fire_lv | fire_sat
+
+    def snapshot(aux):
+        valid = st.inp[..., F_VALID] > 0
+        circ = jnp.sum(valid.astype(I32), axis=(-2, -1))
+        dst0 = jnp.sum((valid & (st.inp[..., F_DST] == 0)).astype(I32),
+                       axis=(-2, -1))
+        stalled = jnp.sum((st.q_size > 0).astype(I32), axis=-1)
+        wd = jnp.sum((st.st == ST_WAIT_DIR).astype(I32), axis=-1)
+        wdd = jnp.sum((st.st == ST_WAIT_DATA).astype(I32), axis=-1)
+        snap = lambda new, old: jnp.where(fire, new, old)
+        return ExecAux(
+            abort=jnp.where(fire, jnp.where(fire_sat, ABORT_SATURATION,
+                                            ABORT_LIVELOCK), aux.abort),
+            abort_cycle=snap(st.cycle, aux.abort_cycle),
+            abort_stats=jnp.where(fire[:, None], st.stats, aux.abort_stats),
+            circ=snap(circ, aux.circ),
+            wait_dir=snap(wd, aux.wait_dir),
+            wait_data=snap(wdd, aux.wait_data),
+            stalled=snap(stalled, aux.stalled),
+            dst0=snap(dst0, aux.dst0),
+        )
+
+    aux = jax.lax.cond(jnp.any(fire), snapshot, lambda a: a, mon.aux)
+    return _Mon(prog, frz, refs_anchor, aux)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 3))
+def _run_jit(s: SimState, cfg: SimConfig, max_cycles: jnp.ndarray, chunk: int):
+    """Drive a state to completion in one compiled loop; returns
+    ``(state, ExecAux)``.
+
+    The driver is batched (leading scenario axis); a solo state is lifted
+    to a batch of one and unlifted on return, so every caller shares one
+    code path.  ``cycle_step`` is vmapped and every scenario terminates
+    independently.  A finished scenario is NOT frozen with a full-state
+    select — stepping a finished state is a semantic no-op on every leaf
+    except the clock (all phase masks are false and every statistic bump
+    is zero), and keeping the pre-step state alive for a freeze select
+    would block XLA's in-place reuse of every large buffer in the loop
+    carry.  Instead the loop records each scenario's finish cycle and
+    rewrites the per-scenario ``cycle`` leaf at the end, so the returned
+    state is bit-identical to B solo runs.  Aborted scenarios (livelock /
+    saturation monitors) likewise keep stepping; their reported statistics
+    come from the ``ExecAux`` snapshot taken at the abort cycle, so results
+    are independent of when the loop exits.
     """
-    batched = s.cycle.ndim == 1
+    solo = s.cycle.ndim == 0
+    if solo:
+        s = jax.tree.map(lambda x: x[None], s)
 
     geo = make_geometry(cfg.rows, cfg.cols)
     ctx = make_node_ctx(cfg)
+    vstep = jax.vmap(lambda st: cycle_step(st, cfg, geo, ctx))
 
-    if batched:
-        vstep = jax.vmap(lambda st: cycle_step(st, cfg, geo, ctx))
+    def step(c):
+        st, done, mon = c
+        nxt = vstep(st)
+        done = jnp.where((done < 0) & finished(nxt), nxt.cycle, done)
+        active = (done < 0) & (mon.aux.abort == 0)
+        return nxt, done, _mon_update(mon, nxt, active, cfg)
 
-        def step(c):
-            st, done = c
-            nxt = vstep(st)
-            fin = finished(nxt)
-            done = jnp.where((done < 0) & fin, nxt.cycle, done)
-            return nxt, done
+    def alive(done, mon):
+        return jnp.any((done < 0) & (mon.aux.abort == 0))
 
-        carry = (s, jnp.full(s.cycle.shape, -1, jnp.int32))
-        if chunk > 1:
-            # main loop: whole chunks with NO per-cycle branch (a per-step
-            # lax.cond guard costs carry copies); the loop condition keeps
-            # whole chunks from overstepping the cycle cap
-            def chunk_cond(c):
-                st, done = c
-                return jnp.any(done < 0) & (st.cycle[0] + chunk <= max_cycles)
+    carry = (s, jnp.full(s.cycle.shape, -1, I32), _mon_init(s))
+    if chunk > 1:
+        # main loop: whole chunks with NO per-cycle branch (a per-step
+        # lax.cond guard costs carry copies); the loop condition keeps
+        # whole chunks from overstepping the cycle cap
+        def chunk_cond(c):
+            st, done, mon = c
+            return alive(done, mon) & (st.cycle[0] + chunk <= max_cycles)
 
-            def chunk_body(c):
-                c, _ = jax.lax.scan(lambda cc, _: (step(cc), ()), c,
-                                    None, length=chunk)
-                return c
+        def chunk_body(c):
+            c, _ = jax.lax.scan(lambda cc, _: (step(cc), ()), c,
+                                None, length=chunk)
+            return c
 
-            carry = jax.lax.while_loop(chunk_cond, chunk_body, carry)
+        carry = jax.lax.while_loop(chunk_cond, chunk_body, carry)
 
-        # tail: per-cycle, so an unfinished scenario stops at exactly
-        # max_cycles just like a solo run
-        def tail_cond(c):
-            st, done = c
-            return jnp.any(done < 0) & (st.cycle[0] < max_cycles)
+    # tail: per-cycle, so an unfinished scenario stops at exactly
+    # max_cycles just like the unchunked loop
+    def tail_cond(c):
+        st, done, mon = c
+        return alive(done, mon) & (st.cycle[0] < max_cycles)
 
-        fs, done = jax.lax.while_loop(tail_cond, step, carry)
-        # finished scenarios kept no-op stepping; restore their true clock
-        return fs._replace(cycle=jnp.where(done >= 0, done, fs.cycle))
+    fs, done, mon = jax.lax.while_loop(tail_cond, step, carry)
+    aux = mon.aux
+    # finished scenarios kept no-op stepping; restore their true clock.
+    # aborted scenarios report the abort cycle.
+    cyc = jnp.where(done >= 0, done,
+                    jnp.where(aux.abort > 0, aux.abort_cycle, fs.cycle))
+    fs = fs._replace(cycle=cyc)
+    if solo:
+        unlift = lambda x: x[0]
+        fs = jax.tree.map(unlift, fs)
+        aux = jax.tree.map(unlift, aux)
+    return fs, aux
 
-    def cond(st):
-        return (~finished(st)) & (st.cycle < max_cycles)
 
-    def body(st):
-        return cycle_step(st, cfg, geo, ctx)
+def stats_list(s: SimState, aux: ExecAux) -> List[Dict[str, int]]:
+    """Per-scenario statistics dicts from a driven state + its ExecAux.
 
-    if chunk <= 1:
-        return jax.lax.while_loop(cond, body, s)
-
-    # chunked: run `chunk` cycles per termination check (fewer host syncs,
-    # and the inner scan unrolls into a tighter compiled loop)
-    def chunk_body(st):
-        def scan_fn(carry, _):
-            nxt = jax.lax.cond(cond(carry), body, lambda x: x, carry)
-            return nxt, ()
-        st, _ = jax.lax.scan(scan_fn, st, None, length=chunk)
-        return st
-
-    return jax.lax.while_loop(cond, chunk_body, s)
+    Healthy scenarios get exactly the classic key set (STAT_NAMES +
+    ``cycles`` + ``finished``) — bit-identical to what a solo run always
+    produced.  Aborted scenarios report the snapshot taken at the abort
+    cycle plus ``aborted`` (label) and the diagnostic counters."""
+    stats = np.atleast_2d(np.asarray(s.stats))
+    cyc = np.atleast_1d(np.asarray(s.cycle))
+    fin = np.atleast_1d(np.asarray(finished(s)))
+    a = {k: np.atleast_1d(np.asarray(v)) for k, v in aux._asdict().items()}
+    a["abort_stats"] = np.atleast_2d(np.asarray(aux.abort_stats))
+    out = []
+    for b in range(cyc.shape[0]):
+        code = int(a["abort"][b])
+        if code:
+            d = {k: int(v) for k, v in zip(STAT_NAMES, a["abort_stats"][b])}
+            d["cycles"] = int(a["abort_cycle"][b])
+            d["finished"] = 0
+            d["aborted"] = ABORT_LABELS[code]
+            d["circulating_flits"] = int(a["circ"][b])
+            d["wait_dir_nodes"] = int(a["wait_dir"][b])
+            d["wait_data_nodes"] = int(a["wait_data"][b])
+            d["stalled_queues"] = int(a["stalled"][b])
+            d["flits_to_node0"] = int(a["dst0"][b])
+        else:
+            d = {k: int(v) for k, v in zip(STAT_NAMES, stats[b])}
+            d["cycles"] = int(cyc[b])
+            d["finished"] = int(bool(fin[b]))
+        out.append(d)
+    return out
 
 
 def run(cfg: SimConfig, trace: np.ndarray, max_cycles: Optional[int] = None,
-        chunk: int = 1) -> Dict[str, int]:
-    """Run the vectorized simulator to completion; returns statistics."""
+        chunk: int = 1) -> Union[Dict[str, int], List[Dict[str, int]]]:
+    """Run the simulator to completion; returns statistics.
+
+    ``trace`` is ``(num_nodes, M)`` for a solo run (returns one dict) or
+    ``(B, num_nodes, M)`` for a batched run (returns a list of dicts; the
+    policy knobs are then shared — use :mod:`repro.core.sweep` or
+    :mod:`repro.core.engine` to vary them per scenario)."""
     s = init_state(cfg, trace)
-    s = _run_jit(s, cfg, jnp.asarray(max_cycles or cfg.max_cycles, jnp.int32),
-                 chunk)
-    stats = np.asarray(s.stats)
-    out = {k: int(v) for k, v in zip(STAT_NAMES, stats)}
-    out["cycles"] = int(s.cycle)
-    out["finished"] = int(bool(finished(s)))
-    return out
+    solo = s.cycle.ndim == 0
+    s, aux = _run_jit(s, cfg, jnp.asarray(max_cycles or cfg.max_cycles,
+                                          jnp.int32), chunk)
+    out = stats_list(s, aux)
+    return out[0] if solo else out
 
 
 class VectorSim:
@@ -168,6 +337,6 @@ class VectorSim:
 
     def run(self, max_cycles: Optional[int] = None) -> Dict[str, int]:
         limit = max_cycles or self.cfg.max_cycles
-        self.state = _run_jit(self.state, self.cfg,
-                              jnp.asarray(limit, jnp.int32), 1)
+        self.state, _ = _run_jit(self.state, self.cfg,
+                                 jnp.asarray(limit, jnp.int32), 1)
         return self.stats()

@@ -20,7 +20,9 @@ What may vary per scenario:
 
 What must be shared (it changes array shapes or compiled structure):
 mesh size, cache geometry, latencies, ``dir_layout``, queue/ROB depths —
-these come from the sweep-wide ``SweepSpec.cfg``.
+these come from the sweep-wide ``SweepSpec.cfg``.  Mixed-shape scenario
+lists are handled one level up: :mod:`repro.core.engine` buckets them by
+structural config and runs one sweep (one compiled program) per bucket.
 """
 from __future__ import annotations
 
@@ -34,12 +36,12 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from .config import SimConfig
-from .ref_serial import STAT_NAMES
-from .sim import _run_jit, finished, run
+from .sim import _run_jit, run, stats_list
 from .state import SimState, init_state
 from .trace import stacked_traces
 
-__all__ = ["ScenarioSpec", "SweepSpec", "run_sweep", "run_sequential"]
+__all__ = ["ScenarioSpec", "SweepSpec", "run_sweep", "run_sequential",
+           "scenario_device_count"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,11 +120,13 @@ class SweepSpec:
         return mig, thr, cen
 
 
-def _stats_dict(stats_row: np.ndarray, cycles: int, fin: bool) -> Dict[str, int]:
-    out = {k: int(v) for k, v in zip(STAT_NAMES, stats_row)}
-    out["cycles"] = int(cycles)
-    out["finished"] = int(fin)
-    return out
+def scenario_device_count(batch: int, ndev: int) -> int:
+    """Devices the scenario axis uses.  :func:`run_sweep` pads an
+    indivisible batch up to a multiple of this count (with copies of the
+    last scenario, dropped from the results), so every device carries
+    ``ceil(batch / n)`` scenarios; the planner's cost model in
+    :mod:`repro.core.engine` relies on the same number."""
+    return max(min(ndev, batch), 1)
 
 
 def _maybe_shard(s: SimState, batch: int) -> SimState:
@@ -137,8 +141,8 @@ def _maybe_shard(s: SimState, batch: int) -> SimState:
     bit-identical either way (integer ops, no cross-scenario math).
     """
     devs = jax.local_devices()
-    n = min(len(devs), batch)
-    while n > 1 and batch % n:
+    n = scenario_device_count(batch, len(devs))
+    while n > 1 and batch % n:      # defensive: unpadded direct callers
         n -= 1
     if n <= 1:
         return s
@@ -156,19 +160,28 @@ def run_sweep(spec: SweepSpec, max_cycles: Optional[int] = None,
     """
     spec.validate()
     cfg = spec.cfg
-    s = init_state(cfg, spec.traces())
+    traces = spec.traces()
     mig, thr, cen = spec.knob_arrays()
+    # pad an indivisible batch up to a multiple of the device count with
+    # copies of the last scenario (dropped from the results): 5 scenarios
+    # on 4 devices would otherwise collapse to a single device.  Copies
+    # finish the same cycle as their original, so padding costs no
+    # wall-clock, and scenarios are independent, so results are unchanged.
+    pad = (-spec.size) % scenario_device_count(spec.size,
+                                               len(jax.local_devices()))
+    if pad:
+        traces = np.concatenate([traces, np.repeat(traces[-1:], pad, 0)])
+        mig, thr, cen = (np.concatenate([a, np.repeat(a[-1:], pad, 0)])
+                         for a in (mig, thr, cen))
+    s = init_state(cfg, traces)
     s = s._replace(knob_mig=jnp.asarray(mig),
                    knob_mig_thr=jnp.asarray(thr),
                    knob_central=jnp.asarray(cen))
-    s = _maybe_shard(s, spec.size)
-    s = _run_jit(s, cfg, jnp.asarray(max_cycles or cfg.max_cycles, jnp.int32),
-                 chunk)
-    stats = np.asarray(s.stats)
-    cycles = np.asarray(s.cycle)
-    fins = np.asarray(finished(s))
-    return [_stats_dict(stats[b], cycles[b], bool(fins[b]))
-            for b in range(spec.size)]
+    s = _maybe_shard(s, spec.size + pad)
+    s, aux = _run_jit(s, cfg,
+                      jnp.asarray(max_cycles or cfg.max_cycles, jnp.int32),
+                      chunk)
+    return stats_list(s, aux)[:spec.size]
 
 
 def run_sequential(spec: SweepSpec, max_cycles: Optional[int] = None,

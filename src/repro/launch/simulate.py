@@ -2,23 +2,27 @@
 
     PYTHONPATH=src python -m repro.launch.simulate --rows 16 --cols 16 \
         --app matmul --refs 100
+
+Every mode (except ``--serial``) routes through the execution-plan layer
+(:mod:`repro.core.engine`): scenarios are bucketed by structural config,
+each bucket compiles once, and a cost model picks the batched-sweep or
+spatially-sharded backend per bucket.
+
 Batched multi-scenario sweep (one compiled program for all scenarios):
     ... --sweep --apps matmul,equake,mgrid --seeds 0,1
-Multi-device:
-    ... --sharded   (tiles the simulated mesh over jax.devices())
+Spatial sharding over jax.devices() (falls back to the dense backend on a
+single device or an indivisible mesh):
+    ... --sharded
+Heterogeneous plan — mixed mesh shapes/apps/knobs from a manifest (a JSON
+file, inline JSON, or the compact ROWSxCOLS:APP:SEED[:REFS] grammar):
+    ... --plan manifest.json
+    ... --plan '8x8:matmul:0:50;16x16:equake:1:50'
 """
 from __future__ import annotations
 
 import argparse
 import json
-import os
-import sys
 import time
-
-import numpy as np
-
-from repro.core.config import SimConfig
-from repro.core.trace import app_trace, random_trace
 
 
 def main() -> None:
@@ -33,10 +37,16 @@ def main() -> None:
     ap.add_argument("--no-migration", action="store_true")
     ap.add_argument("--serial", action="store_true",
                     help="run the golden-model serial simulator instead")
-    ap.add_argument("--sharded", action="store_true")
+    ap.add_argument("--sharded", action="store_true",
+                    help="force the spatial shard_map backend (single-device "
+                         "runs fall back to the dense backend)")
     ap.add_argument("--sweep", action="store_true",
                     help="batched sweep: run apps x seeds scenarios in one "
                          "compiled program (repro.core.sweep)")
+    ap.add_argument("--plan", default=None, metavar="MANIFEST",
+                    help="scenario manifest: JSON file path, inline JSON, or "
+                         "compact 'ROWSxCOLS:APP:SEED[:REFS];...' items; "
+                         "mixed mesh shapes allowed (repro.core.engine)")
     ap.add_argument("--apps", default=None,
                     help="comma list of apps for --sweep (default: --app)")
     ap.add_argument("--seeds", default=None,
@@ -47,79 +57,82 @@ def main() -> None:
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
 
+    modes = [m for m in ("serial", "sharded", "sweep", "plan")
+             if getattr(args, m)]
+    if len(modes) > 1:
+        ap.error(f"choose at most one of --serial/--sharded/--sweep/--plan "
+                 f"(got {modes})")
+
+    from repro.core.config import SimConfig
     cfg = SimConfig(rows=args.rows, cols=args.cols,
                     centralized_directory=args.centralized,
-                    dir_layout="home" if args.sharded else "flat",
                     migration_enabled=not args.no_migration,
                     max_cycles=args.max_cycles)
 
-    if args.sweep and (args.sharded or args.serial):
-        ap.error("--sweep cannot be combined with --sharded or --serial "
-                 "(the sweep engine batches the vectorized simulator; "
-                 "spatial sharding of sweeps is a ROADMAP item)")
-
-    if args.sweep:
-        # expose the cores as XLA host devices so the sweep shards its
-        # scenario axis across them (must precede the first jax import)
-        if "jax" not in sys.modules \
-                and "--xla_force_host_platform_device_count" \
-                not in os.environ.get("XLA_FLAGS", ""):
-            os.environ["XLA_FLAGS"] = (
-                os.environ.get("XLA_FLAGS", "")
-                + f" --xla_force_host_platform_device_count={os.cpu_count()}")
-        from repro.core.sweep import SweepSpec, run_sweep
-        apps = (args.apps or args.app).split(",")
-        seeds = [int(x) for x in (args.seeds or str(args.seed)).split(",")]
-        spec = SweepSpec.cross(cfg, apps, seeds, args.refs)
-        t0 = time.time()
-        per_scenario = run_sweep(spec, chunk=args.chunk)
-        dt = time.time() - t0
-        payload = {
-            "scenarios": [
-                {"app": sc.app, "seed": sc.seed, **st}
-                for sc, st in zip(spec.scenarios, per_scenario)],
-            "n_scenarios": spec.size,
-            "nodes": cfg.num_nodes,
-            "wall_s": round(dt, 2),
-            "scenarios_per_sec": round(spec.size / dt, 3),
-        }
-        print(json.dumps(payload, indent=1))
-        if args.json:
-            with open(args.json, "w") as f:
-                json.dump(payload, f)
-        return
-
-    tr = (random_trace(cfg, args.refs, args.seed) if args.app == "random"
-          else app_trace(cfg, args.app, args.refs, args.seed))
-
-    t0 = time.time()
     if args.serial:
         from repro.core.ref_serial import SerialSim
+        from repro.core.trace import app_trace, random_trace
+        tr = (random_trace(cfg, args.refs, args.seed) if args.app == "random"
+              else app_trace(cfg, args.app, args.refs, args.seed))
+        t0 = time.time()
         stats = SerialSim(cfg, tr).run()
-    elif args.sharded:
-        import jax
-        from repro.core.sharded import ShardedSim
-        n = len(jax.devices())
-        rows_tiles = 1
-        for cand in range(int(n ** 0.5), 0, -1):
-            if n % cand == 0 and args.rows % cand == 0 \
-                    and args.cols % (n // cand) == 0:
-                rows_tiles = cand
-                break
-        mesh = jax.make_mesh((rows_tiles, n // rows_tiles),
-                             ("data", "model"))
-        stats = ShardedSim(cfg, tr, mesh).run()
+        stats["wall_s"] = round(time.time() - t0, 2)
+        stats["nodes"] = cfg.num_nodes
+        print(json.dumps(stats, indent=1))
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(stats, f)
+        return
+
+    from repro.core import engine
+    if args.sweep or args.plan:
+        engine.expose_host_devices()
+
+    if args.plan:
+        scenarios = engine.load_manifest(args.plan, base=cfg)
+        force = None
+    elif args.sweep:
+        apps = (args.apps or args.app).split(",")
+        seeds = [int(x) for x in (args.seeds or str(args.seed)).split(",")]
+        scenarios = [engine.make_scenario(cfg, app=a, seed=s,
+                                          refs_per_core=args.refs)
+                     for a in apps for s in seeds]
+        force = "sweep"
     else:
-        from repro.core.sim import run
-        stats = run(cfg, tr, chunk=args.chunk)
+        scenarios = [engine.make_scenario(cfg, app=args.app, seed=args.seed,
+                                          refs_per_core=args.refs)]
+        force = "sharded" if args.sharded else None
+
+    plan = engine.compile_plan(scenarios, force_backend=force)
+    t0 = time.time()
+    per_scenario = engine.execute_plan(plan, chunk=args.chunk)
     dt = time.time() - t0
 
-    stats["wall_s"] = round(dt, 2)
-    stats["nodes"] = cfg.num_nodes
-    print(json.dumps(stats, indent=1))
+    # payload schema follows the *mode*, not the scenario count: --sweep
+    # and --plan always emit the {plan, scenarios, ...} form, even for a
+    # single scenario
+    if not (args.sweep or args.plan):
+        payload = dict(per_scenario[0])
+        payload["wall_s"] = round(dt, 2)
+        payload["nodes"] = scenarios[0].cfg.num_nodes
+        payload["backend"] = plan.buckets[0].backend
+        if plan.buckets[0].note:
+            payload["backend_note"] = plan.buckets[0].note
+    else:
+        payload = {
+            "plan": plan.describe(),
+            "scenarios": [
+                {"rows": sc.cfg.rows, "cols": sc.cfg.cols, "app": sc.app,
+                 "seed": sc.seed, **st}
+                for sc, st in zip(scenarios, per_scenario)],
+            "n_scenarios": len(scenarios),
+            "wall_s": round(dt, 2),
+            "scenarios_per_sec": round(len(scenarios) / dt, 3),
+        }
+    print(json.dumps(payload, indent=1))
     if args.json:
         with open(args.json, "w") as f:
-            json.dump(stats, f)
+            json.dump(payload, f)
 
 
 if __name__ == "__main__":

@@ -49,3 +49,26 @@ def test_sharded_single_pod():
 def test_sharded_multi_pod():
     res = run_case('(2, 2, 2), ("pod", "data", "model")', '("pod", "data")')
     assert res["match"], res
+
+
+def test_sharded_clamps_max_cycles_to_dense_backend():
+    """An unfinished capped run stops at exactly max_cycles even when the
+    cap is not a multiple of the host chunk (the tail chunk is clamped),
+    so sharded stats match the dense backend bit-for-bit.  A 1x1 mesh on
+    the lone CPU device suffices — the clamp is host-loop logic."""
+    import jax
+    import numpy as np
+    from repro.core.config import SimConfig
+    from repro.core.sharded import ShardedSim
+    from repro.core.sim import run
+    from repro.core.trace import app_trace
+
+    cfg = SimConfig(rows=4, cols=4, addr_bits=14,
+                    centralized_directory=False, dir_layout="home")
+    tr = app_trace(cfg, "mgrid", 25, seed=1)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    got = ShardedSim(cfg, tr, mesh).run(max_cycles=100, chunk=64)
+    ref = run(cfg, tr, max_cycles=100)
+    assert got["cycles"] == 100 and got["finished"] == 0
+    assert got == ref, {k: (ref.get(k), got.get(k)) for k in ref
+                        if ref.get(k) != got.get(k)}

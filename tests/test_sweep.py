@@ -134,6 +134,39 @@ def test_sweep_sharded_over_host_devices():
         f"no result\nstdout={out.stdout}\nstderr={out.stderr[-2000:]}")
 
 
+def test_sweep_indivisible_batch_pads_across_devices():
+    """3 scenarios on 2 devices: run_sweep pads the batch to 4 internally
+    so both devices are used; results stay bit-identical to solo runs
+    (subprocess so the main pytest process keeps its single device)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        import sys, json
+        sys.path.insert(0, "src")
+        from repro.core.config import SimConfig
+        from repro.core.sim import run
+        from repro.core.sweep import SweepSpec, run_sweep
+        from repro.core.trace import app_trace
+
+        cfg = SimConfig(rows=4, cols=4, addr_bits=14, migrate_threshold=2,
+                        centralized_directory=False)
+        spec = SweepSpec.cross(cfg, ["matmul", "equake", "mgrid"], [3], 15)
+        got = run_sweep(spec, chunk=4)
+        ref = [run(cfg, app_trace(cfg, sc.app, 15, sc.seed))
+               for sc in spec.scenarios]
+        print("RESULT " + json.dumps({"n": len(got), "match": got == ref}))
+    """)
+    out = subprocess.run([sys.executable, "-c", code], cwd=REPO_ROOT,
+                         capture_output=True, text=True, timeout=900)
+    for line in out.stdout.splitlines():
+        if line.startswith("RESULT "):
+            res = json.loads(line[len("RESULT "):])
+            assert res["n"] == 3 and res["match"], res
+            return
+    raise AssertionError(
+        f"no result\nstdout={out.stdout}\nstderr={out.stderr[-2000:]}")
+
+
 def test_solo_run_unchanged_by_batch_support():
     """A 2-D trace still drives the classic solo path (regression guard
     for the batch-axis threading through init_state/_run_jit)."""
