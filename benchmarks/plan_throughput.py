@@ -14,6 +14,14 @@ Part 2 — planned mixed-shape sweep: a manifest mixing two mesh shapes runs
 through ``compile_plan``/``execute_plan`` (one compiled program per shape
 bucket) vs the same scenarios as sequential solo ``run()`` calls, with a
 bit-exactness cross-check, so no speedup is ever bought with wrong numbers.
+
+Part 3 — backend shoot-out: ONE bucket (B scenarios of one mesh shape)
+forced through each backend — vmapped ``sweep``, spatial ``sharded``
+(B sequential spatial runs), composed ``scenario x row x col`` — on this
+host's devices, with wall-clock per backend, the planner's own pick, and
+a cross-backend bit-equality check.  Backends that are structurally
+impossible here (one device, indivisible mesh) degrade to ``sweep`` and
+are reported with the planner's note.
 """
 from __future__ import annotations
 
@@ -105,6 +113,53 @@ def bench_plan(args) -> dict:
     }
 
 
+def bench_backends(args) -> dict:
+    """Force one bucket through sweep / sharded / composed and compare."""
+    import jax
+    base = SimConfig(rows=args.bk_rows, cols=args.bk_cols,
+                     centralized_directory=False,
+                     max_cycles=args.max_cycles)
+    scenarios = [engine.make_scenario(base, app=args.app, seed=s,
+                                      refs_per_core=args.refs)
+                 for s in range(args.bk_batch)]
+    out = {"rows": args.bk_rows, "cols": args.bk_cols,
+           "batch": args.bk_batch, "devices": len(jax.devices())}
+    results = {}
+    for force in ("sweep", "sharded", "composed"):
+        if force == "sharded":
+            # sharded has no batch axis: B sequential spatial plans
+            plans = [engine.compile_plan([sc], force_backend="sharded")
+                     for sc in scenarios]
+        else:
+            plans = [engine.compile_plan(scenarios, force_backend=force)]
+        # warm compile caches out of the timed region
+        for p in plans:
+            engine.execute_plan(p, chunk=args.chunk,
+                                sharded_chunk=args.sharded_chunk)
+        t0 = time.time()
+        res = []
+        for p in plans:
+            res.extend(engine.execute_plan(p, chunk=args.chunk,
+                                           sharded_chunk=args.sharded_chunk))
+        dt = time.time() - t0
+        b0 = plans[0].buckets[0]
+        out[force] = {
+            "wall_s": round(dt, 2),
+            "scenarios_per_sec": round(len(scenarios) / dt, 3),
+            "effective_backend": b0.backend,
+            **({"grid": list(b0.grid)} if b0.backend != "sweep" else {}),
+            **({"note": b0.note} if b0.note else {}),
+        }
+        results[force] = res
+    auto = engine.compile_plan(scenarios).buckets[0]
+    out["planner_pick"] = auto.backend
+    # sharded runs with dir_layout="home"; healthy stats are still
+    # bit-identical across backends, which is the point of the check
+    out["bit_identical_across_backends"] = (
+        results["sweep"] == results["sharded"] == results["composed"])
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--trace-rows", type=int, default=256)
@@ -117,6 +172,12 @@ def main() -> None:
                     help="time the loop generator at the full target mesh "
                          "instead of extrapolating from --loop-rows/cols")
     ap.add_argument("--skip-plan", action="store_true")
+    ap.add_argument("--skip-backends", action="store_true")
+    ap.add_argument("--bk-rows", type=int, default=16)
+    ap.add_argument("--bk-cols", type=int, default=16)
+    ap.add_argument("--bk-batch", type=int, default=4,
+                    help="scenarios in the backend shoot-out bucket")
+    ap.add_argument("--sharded-chunk", type=int, default=64)
     ap.add_argument("--rows-a", type=int, default=8)
     ap.add_argument("--cols-a", type=int, default=8)
     ap.add_argument("--rows-b", type=int, default=16)
@@ -133,12 +194,17 @@ def main() -> None:
     payload = {"trace_synthesis": bench_trace(args)}
     if not args.skip_plan:
         payload["planned_sweep"] = bench_plan(args)
+    if not args.skip_backends:
+        payload["backend_shootout"] = bench_backends(args)
     print(json.dumps(payload, indent=1))
     if args.json:
         with open(args.json, "w") as f:
             json.dump(payload, f)
     if not args.skip_plan and payload["planned_sweep"]["mismatched_scenarios"]:
         raise SystemExit("planned sweep diverged from sequential runs")
+    if not args.skip_backends and \
+            not payload["backend_shootout"]["bit_identical_across_backends"]:
+        raise SystemExit("backends diverged on the same scenarios")
 
 
 if __name__ == "__main__":

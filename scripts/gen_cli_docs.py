@@ -1,0 +1,153 @@
+#!/usr/bin/env python
+"""Generate ``docs/cli.md`` from the ``repro.launch.simulate`` argparse tree.
+
+    PYTHONPATH=src python scripts/gen_cli_docs.py            # rewrite
+    PYTHONPATH=src python scripts/gen_cli_docs.py --check    # CI drift gate
+
+The page is fully derived: the flag table comes from
+``repro.launch.simulate.build_parser()`` (so help strings are the single
+source of truth) and the worked examples live in this generator.  CI runs
+``--check`` and fails when the committed page drifts from the parser.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
+
+DOC_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        os.pardir, "docs", "cli.md")
+
+PROLOG = """\
+# `repro.launch.simulate` — command-line reference
+
+> **Generated file — do not edit.**  Regenerate with
+> `PYTHONPATH=src python scripts/gen_cli_docs.py` (CI fails on drift).
+
+The launcher is one entry point with four modes.  All but `--serial`
+route through the execution-plan layer (`repro.core.engine`): scenarios
+are bucketed by structural config, each bucket compiles once, and a cost
+model picks the `sweep` / `sharded` / `composed` backend per bucket
+(`docs/architecture.md` has the decision table).
+
+## Modes
+
+```sh
+# solo run (a plan of one scenario)
+PYTHONPATH=src python -m repro.launch.simulate --rows 16 --cols 16 \\
+    --app matmul --refs 100
+
+# golden-model serial simulator (no planner)
+PYTHONPATH=src python -m repro.launch.simulate --serial --rows 8 --cols 8
+
+# batched sweep: the --apps x --seeds cross-product as ONE compiled program
+PYTHONPATH=src python -m repro.launch.simulate --rows 16 --cols 16 \\
+    --sweep --apps matmul,equake,mgrid --seeds 0,1 --refs 50
+
+# heterogeneous plan from a manifest
+PYTHONPATH=src python -m repro.launch.simulate --plan manifest.json
+```
+
+`--backend {auto,sweep,sharded,composed}` pins the planner's backend in
+any planner mode; a structurally impossible pin degrades to `sweep` with
+an explanatory `note` in the output instead of failing.
+
+## `--plan` manifests
+
+`--plan` accepts three spellings of the same thing.
+
+**1. Compact grammar** — `ROWSxCOLS:APP:SEED[:REFS]` items joined with
+`;` or `,` (APP defaults to `matmul`, SEED to `0`, REFS to `200`):
+
+```sh
+PYTHONPATH=src python -m repro.launch.simulate \\
+    --plan '8x8:matmul:0:50;8x8:equake:1:50;16x16:equake:0:50'
+```
+
+**2. Inline JSON** — an object with an optional `base` (any `SimConfig`
+field, shared by every scenario) and a `scenarios` list (workload keys
+`app`/`seed`/`refs_per_core` plus per-scenario `SimConfig` overrides —
+structural overrides split compile buckets, policy knobs do not):
+
+```sh
+PYTHONPATH=src python -m repro.launch.simulate --plan '{
+  "base": {"centralized_directory": false},
+  "scenarios": [
+    {"rows": 8,  "cols": 8,  "app": "matmul", "seed": 0, "refs_per_core": 50},
+    {"rows": 16, "cols": 16, "app": "equake", "seed": 1,
+     "migration_enabled": false}]}'
+```
+
+**3. A path to a JSON file** holding the same object (or a bare
+scenario list).
+
+Output for `--sweep`/`--plan` is a JSON payload with the plan summary
+(`plan.buckets[*].backend`, the composed backend's device `grid`, any
+degradation `note`) and one stats object per scenario in input order.
+
+## Flags
+"""
+
+
+def flag_table() -> str:
+    from repro.launch.simulate import build_parser
+    ap = build_parser()
+    rows = ["| flag | type | default | description |",
+            "|---|---|---|---|"]
+    for a in ap._actions:
+        if isinstance(a, argparse._HelpAction):
+            continue
+        flag = ", ".join(f"`{s}`" for s in a.option_strings)
+        if a.choices:
+            typ = "{" + ",".join(str(c) for c in a.choices) + "}"
+        elif isinstance(a, argparse._StoreTrueAction):
+            typ = "flag"
+        elif a.type is int:
+            typ = "int"
+        else:
+            typ = "str"
+        default = ("" if a.default is None or a.default is False
+                   or a.default is argparse.SUPPRESS
+                   else f"`{a.default}`")
+        help_text = " ".join((a.help or "").split())
+        rows.append(f"| {flag} | {typ} | {default} | {help_text} |")
+    return "\n".join(rows) + "\n"
+
+
+def render() -> str:
+    return PROLOG + flag_table()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="fail (exit 1) if docs/cli.md differs from the "
+                         "argparse tree instead of rewriting it")
+    args = ap.parse_args()
+    text = render()
+    if args.check:
+        try:
+            with open(DOC_PATH) as f:
+                on_disk = f.read()
+        except FileNotFoundError:
+            print(f"gen_cli_docs: {DOC_PATH} missing", file=sys.stderr)
+            return 1
+        if on_disk != text:
+            print("gen_cli_docs: docs/cli.md drifted from the argparse "
+                  "tree; run: PYTHONPATH=src python scripts/gen_cli_docs.py",
+                  file=sys.stderr)
+            return 1
+        print("gen_cli_docs: docs/cli.md is current")
+        return 0
+    os.makedirs(os.path.dirname(DOC_PATH), exist_ok=True)
+    with open(DOC_PATH, "w") as f:
+        f.write(text)
+    print(f"gen_cli_docs: wrote {DOC_PATH}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

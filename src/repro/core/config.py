@@ -10,6 +10,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
+__all__ = ["CacheConfig", "SimConfig", "paper_small", "paper_large_cache",
+           "APP_NAMES", "FLITS_OF", "NUM_MSG_TYPES"]
+
 # ---------------------------------------------------------------------------
 # Message types (paper Table 1 + control messages implied by §3.3/§3.4).
 # Values are stable: they appear inside int8/int32 device arrays.

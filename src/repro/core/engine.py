@@ -23,11 +23,25 @@ programs:
      automatically (:func:`choose_tiling`); on one device, or when no
      factoring divides the mesh, the plan falls back to ``sweep`` instead
      of asserting.
+   * ``composed`` — both axes at once: the bucket compiles to a batched
+     ``shard_map`` program over a 3-D ``(scenario, rows, cols)`` device
+     mesh (:func:`repro.core.sharded.run_composed`) — vmap over the
+     scenario axis *inside* the spatially sharded step, halo exchange
+     unchanged per tile.  The device count is factored into
+     ``(batch_shards, row_tiles, col_tiles)`` by :func:`choose_grid`;
+     degeneracies fall out cleanly (one device == solo, ``batch_shards
+     == 1`` == spatial, an indivisible scenario axis pads with copies of
+     the last scenario like :func:`repro.core.sweep.run_sweep`).
 
 3. **Execute** buckets sequentially (each is one compiled program) and
    reassemble per-scenario statistics in the original scenario order —
    bit-identical to running each scenario through a solo
    :func:`repro.core.sim.run`.
+
+Cost-model constants are CPU-calibrated defaults; run
+``benchmarks/calibrate_cost_model.py`` on the actual host to measure them
+and point ``REPRO_COST_MODEL`` (or :func:`load_cost_constants`) at the
+emitted file.
 
 Manifests: :func:`load_manifest` accepts a JSON object/list (or a path to
 one), or the compact CLI grammar ``ROWSxCOLS:APP:SEED[:REFS]`` joined with
@@ -57,8 +71,10 @@ from .trace import TRACE_APPS
 
 __all__ = [
     "Scenario", "Bucket", "ExecutionPlan", "make_scenario", "bucket_key",
-    "choose_tiling", "backend_cost", "choose_backend", "compile_plan",
-    "execute_plan", "plan_and_run", "load_manifest", "expose_host_devices",
+    "choose_tiling", "choose_grid", "backend_cost", "choose_backend",
+    "compile_plan", "execute_plan", "plan_and_run", "load_manifest",
+    "expose_host_devices", "CostConstants", "cost_constants",
+    "set_cost_constants", "load_cost_constants", "save_cost_constants",
 ]
 
 
@@ -81,20 +97,103 @@ KNOB_FIELDS = ("migration_enabled", "migrate_threshold",
 _KNOB_NORM = dict(migration_enabled=True, migrate_threshold=3,
                   centralized_directory=False)
 
-# Cost model constants (driver work per simulated cycle, in node-units).
-#: relative per-node cost of a sharded tile vs the dense single-device
-#: step: halo ppermutes + the global-termination psum.
-HALO_OVERHEAD = 1.25
-#: fixed per-cycle cost of the sharded backend's collectives (latency-
-#: bound, independent of tile size) — keeps small meshes off shard_map.
-SHARD_FIXED = 4096
+@dataclasses.dataclass(frozen=True)
+class CostConstants:
+    """Cost-model constants: driver work per simulated cycle, node-units.
+
+    The defaults are CPU-calibrated guesses; ``benchmarks/
+    calibrate_cost_model.py`` measures them on the actual host and emits
+    a JSON file this module loads (:func:`load_cost_constants`, or
+    automatically from the path in ``$REPRO_COST_MODEL`` at import).
+
+    Attributes:
+        halo_overhead: relative per-node cost of a sharded tile vs the
+            dense single-device step (halo ppermutes + the termination
+            psum), multiplying the tile's bandwidth term.
+        shard_fixed: fixed per-cycle cost of the spatial backend's
+            collectives (latency-bound, independent of tile size) —
+            keeps small meshes off ``shard_map``.
+        batch_fixed: the composed backend's incremental fixed per-cycle
+            cost for each *additional* local scenario vmapped through a
+            spatially-sharded tile step: the halo slabs still ride one
+            ppermute per direction, but every extra scenario adds its
+            own slab payload to those fixed-latency collectives (and a
+            lane to the per-scenario termination psum).  This is what
+            makes the planner prefer sharding the scenario axis (which
+            needs no collectives) over deeper spatial tiling when the
+            devices could do either.
+    """
+
+    halo_overhead: float = 1.25
+    shard_fixed: float = 4096.0
+    batch_fixed: float = 1024.0
+
+
+_COST = CostConstants()
+
+
+def cost_constants() -> CostConstants:
+    """The cost-model constants currently in force."""
+    return _COST
+
+
+def set_cost_constants(c: CostConstants) -> None:
+    """Install ``c`` as the constants used by :func:`backend_cost` (and
+    therefore every subsequent :func:`compile_plan`)."""
+    global _COST
+    _COST = c
+
+
+def load_cost_constants(path: str) -> CostConstants:
+    """Load calibrated constants from a JSON file (as emitted by
+    ``benchmarks/calibrate_cost_model.py``) and install them.
+
+    The file must hold an object with ``halo_overhead`` /
+    ``shard_fixed`` / ``batch_fixed`` keys; anything else (calibration
+    metadata) is ignored.  Returns the installed :class:`CostConstants`.
+    """
+    with open(path) as f:
+        obj = json.load(f)
+    c = CostConstants(**{k: float(obj[k])
+                         for k in ("halo_overhead", "shard_fixed",
+                                   "batch_fixed") if k in obj})
+    set_cost_constants(c)
+    return c
+
+
+def save_cost_constants(path: str, c: CostConstants,
+                        meta: Optional[Dict] = None) -> None:
+    """Write ``c`` (plus optional calibration ``meta``) as a JSON file
+    round-trippable through :func:`load_cost_constants`."""
+    obj = dataclasses.asdict(c)
+    if meta:
+        obj["meta"] = meta
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1)
+        f.write("\n")
+
+
+if os.environ.get("REPRO_COST_MODEL"):
+    load_cost_constants(os.environ["REPRO_COST_MODEL"])
 
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
     """One unit of work for the planner: a fully-resolved config plus a
-    workload.  ``cfg`` carries everything, including policy knobs; the
-    planner decides what is structural and what is traced."""
+    workload.
+
+    Attributes:
+        cfg: the scenario's complete :class:`SimConfig`, *including*
+            policy knobs — the planner decides what is structural (splits
+            compile buckets) and what is traced (rides as
+            ``SimState.knob_*`` state).
+        app: workload name — a :data:`repro.core.trace.TRACE_APPS` key
+            (``matmul``/``apsi``/``mgrid``/``wupwise``/``equake``) or
+            ``"random"`` for the uniform synthetic injector.
+        seed: trace-synthesis seed.
+        refs_per_core: memory references each core issues; the synthesized
+            trace is ``(cfg.num_nodes, refs_per_core)`` int32 addresses.
+    """
 
     cfg: SimConfig
     app: str = "matmul"            # TRACE_APPS name or "random"
@@ -102,6 +201,8 @@ class Scenario:
     refs_per_core: int = 200
 
     def validate(self) -> None:
+        """Raise ``ValueError``/``AssertionError`` on an invalid config,
+        unknown app name, or non-positive refs_per_core."""
         self.cfg.validate()
         if self.app != "random" and self.app not in TRACE_APPS:
             raise ValueError(f"unknown app {self.app!r}; choose from "
@@ -148,9 +249,23 @@ def choose_tiling(rows: int, cols: int, ndev: int) -> Tuple[int, int]:
 
 
 def backend_cost(backend: str, batch: int, nodes: int, ndev: int,
-                 tiles: Tuple[int, int] = (1, 1)) -> float:
+                 tiles: Union[Tuple[int, int], Tuple[int, int, int]] = (1, 1)
+                 ) -> float:
     """Estimated driver work per simulated cycle, in node-units on the
-    critical path (lower is better)."""
+    critical path (lower is better).
+
+    Args:
+        backend: ``"sweep"`` | ``"sharded"`` | ``"composed"``.
+        batch: scenarios in the bucket.
+        nodes: simulated nodes per scenario (``rows * cols``).
+        ndev: devices the plan may use.
+        tiles: ``(row_tiles, col_tiles)`` for ``sharded``;
+            ``(batch_shards, row_tiles, col_tiles)`` for ``composed``
+            (a 2-tuple is treated as ``batch_shards = 1``).
+
+    Returns: the estimated cost; ``inf`` for a structurally impossible
+    combination (e.g. ``sharded`` with ``batch > 1``)."""
+    c = _COST
     if backend == "sweep":
         # deferred import: sweep pulls in jax, which plan compilation with
         # an explicit ndev otherwise never needs
@@ -160,69 +275,163 @@ def backend_cost(backend: str, batch: int, nodes: int, ndev: int,
         n = scenario_device_count(batch, ndev)
         return nodes * -(-batch // n)
     if backend == "sharded":
-        nt = tiles[0] * tiles[1]
+        nt = tiles[-2] * tiles[-1]
         if batch != 1 or nt <= 1:
             return float("inf")
-        return nodes / nt * HALO_OVERHEAD + SHARD_FIXED
+        return nodes / nt * c.halo_overhead + c.shard_fixed
+    if backend == "composed":
+        bs = tiles[0] if len(tiles) == 3 else 1
+        nt = tiles[-2] * tiles[-1]
+        if nt <= 1 or bs < 1:
+            return float("inf")
+        # each device carries ceil(batch / batch_shards) scenarios, all
+        # vmapped through one tile step; the four halo ppermutes are paid
+        # once per cycle (batched slabs), so the bandwidth term scales
+        # with the local batch and each extra local scenario adds only
+        # its slab payload (batch_fixed) to the fixed collectives
+        local_b = -(-batch // min(bs, batch))
+        return (local_b * nodes / nt * c.halo_overhead + c.shard_fixed
+                + (local_b - 1) * c.batch_fixed)
     raise ValueError(f"unknown backend {backend!r}")
+
+
+def choose_grid(batch: int, rows: int, cols: int, ndev: int
+                ) -> Tuple[Tuple[int, int, int], float]:
+    """Factor ``ndev`` into the cheapest composed ``(batch_shards,
+    row_tiles, col_tiles)`` grid for a ``batch``-scenario bucket of
+    ``rows x cols`` meshes.
+
+    Every split of the device count between the scenario axis and the
+    spatial tiling (``choose_tiling`` on the remainder) is costed with
+    :func:`backend_cost`; grids whose spatial part collapses to ``1x1``
+    are skipped (that regime belongs to the sweep backend).
+
+    Returns: ``(grid, cost)``; ``((1, 1, 1), inf)`` when no composed
+    grid is structurally possible."""
+    best, best_cost = (1, 1, 1), float("inf")
+    nodes = rows * cols
+    for bs in range(1, max(min(ndev, batch), 1) + 1):
+        rt, ct = choose_tiling(rows, cols, ndev // bs)
+        if rt * ct <= 1:
+            continue
+        grid = (bs, rt, ct)
+        cost = backend_cost("composed", batch, nodes, ndev, grid)
+        if cost < best_cost:
+            best, best_cost = grid, cost
+    return best, best_cost
+
+
+#: 3-D grid meaning per backend: sweep ignores it, sharded uses the
+#: spatial part, composed uses all three axes.
+_GRID_NONE = (1, 1, 1)
 
 
 def choose_backend(cfg: SimConfig, batch: int, ndev: int,
                    force: Optional[str] = None
-                   ) -> Tuple[str, Tuple[int, int], str]:
-    """Pick ``(backend, tiles, note)`` for one bucket.
+                   ) -> Tuple[str, Tuple[int, int, int], str]:
+    """Pick ``(backend, grid, note)`` for one bucket.
 
-    ``force`` pins the backend (CLI ``--sharded`` / ``--sweep``); a forced
-    ``sharded`` that is structurally impossible (one device, centralized
-    directory, batch > 1, or an indivisible mesh) degrades to ``sweep``
-    with an explanatory note instead of asserting."""
+    Args:
+        cfg: the bucket's structural config (with ``centralized_directory``
+            reflecting whether *any* scenario in the bucket uses it —
+            such buckets can never shard spatially).
+        batch: scenarios in the bucket.
+        ndev: devices available to the plan.
+        force: pin the backend (CLI ``--backend``); a forced ``sharded``
+            or ``composed`` that is structurally impossible (one device,
+            centralized directory, an indivisible mesh, or — for
+            ``sharded`` — ``batch > 1``) degrades to ``sweep`` with an
+            explanatory note instead of asserting.
+
+    Returns: the backend name, its ``(batch_shards, row_tiles,
+    col_tiles)`` device grid (``(1, 1, 1)`` for sweep), and a short
+    explanation when the choice was forced, degraded, or cost-driven."""
     tiles = choose_tiling(cfg.rows, cfg.cols, ndev)
-    eligible = (batch == 1 and not cfg.centralized_directory
-                and tiles != (1, 1))
+    spatial_ok = not cfg.centralized_directory and tiles != (1, 1)
+    grid, c_comp = (choose_grid(batch, cfg.rows, cfg.cols, ndev)
+                    if not cfg.centralized_directory
+                    else (_GRID_NONE, float("inf")))
     if force == "sweep":
-        return "sweep", (1, 1), "forced"
+        return "sweep", _GRID_NONE, "forced"
     if force == "sharded":
-        if eligible:
-            return "sharded", tiles, "forced"
+        if batch == 1 and spatial_ok:
+            return "sharded", (1,) + tiles, "forced"
         why = ("batch > 1" if batch > 1
                else "centralized directory" if cfg.centralized_directory
                else f"no device tiling divides {cfg.rows}x{cfg.cols} "
                     f"over {ndev} device(s)")
-        return "sweep", (1, 1), f"sharded unavailable ({why}); fell back"
+        return "sweep", _GRID_NONE, f"sharded unavailable ({why}); fell back"
+    if force == "composed":
+        if c_comp < float("inf"):
+            return "composed", grid, "forced"
+        why = ("centralized directory" if cfg.centralized_directory
+               else f"no device grid tiles {cfg.rows}x{cfg.cols} over "
+                    f"{ndev} device(s)")
+        return "sweep", _GRID_NONE, f"composed unavailable ({why}); fell back"
     if force is not None:
         raise ValueError(f"unknown backend {force!r}")
     c_sweep = backend_cost("sweep", batch, cfg.num_nodes, ndev)
-    if eligible:
-        c_shard = backend_cost("sharded", batch, cfg.num_nodes, ndev, tiles)
-        if c_shard < c_sweep:
-            return "sharded", tiles, (f"cost {c_shard:.0f} < sweep "
-                                      f"{c_sweep:.0f}")
-    return "sweep", (1, 1), ""
+    cands = [(c_sweep, "sweep", _GRID_NONE)]
+    if batch == 1 and spatial_ok:
+        cands.append((backend_cost("sharded", batch, cfg.num_nodes, ndev,
+                                   tiles), "sharded", (1,) + tiles))
+    if batch > 1:
+        # batch == 1 composed degenerates to sharded — already a candidate
+        cands.append((c_comp, "composed", grid))
+    cost, backend, grid = min(cands, key=lambda t: t[0])
+    note = "" if backend == "sweep" \
+        else f"cost {cost:.0f} < sweep {c_sweep:.0f}"
+    return backend, grid, note
 
 
 @dataclasses.dataclass(frozen=True)
 class Bucket:
-    """Scenarios sharing one structural config → one compiled program."""
+    """Scenarios sharing one structural config → one compiled program.
+
+    Attributes:
+        cfg: the structural (knob-normalized) config every scenario in
+            the bucket shares.
+        scenarios: the bucket's scenarios, in input order.
+        indices: each scenario's position in the original plan list.
+        backend: ``"sweep"`` | ``"sharded"`` | ``"composed"``.
+        grid: the ``(batch_shards, row_tiles, col_tiles)`` device grid —
+            ``(1, 1, 1)`` for sweep, ``(1, rt, ct)`` for sharded.
+        note: why the planner chose/degraded this backend (may be empty).
+    """
 
     cfg: SimConfig                     # structural (knob-normalized) config
     scenarios: Tuple[Scenario, ...]
     indices: Tuple[int, ...]           # positions in the original list
-    backend: str                       # "sweep" | "sharded"
-    tiles: Tuple[int, int] = (1, 1)
+    backend: str                       # "sweep" | "sharded" | "composed"
+    grid: Tuple[int, int, int] = (1, 1, 1)
     note: str = ""
 
     @property
     def batch(self) -> int:
         return len(self.scenarios)
 
+    @property
+    def tiles(self) -> Tuple[int, int]:
+        """The spatial ``(row_tiles, col_tiles)`` part of :attr:`grid`."""
+        return self.grid[1:]
+
+    @property
+    def devices_needed(self) -> int:
+        """Devices this bucket's program is laid out over."""
+        return self.grid[0] * self.grid[1] * self.grid[2]
+
 
 @dataclasses.dataclass(frozen=True)
 class ExecutionPlan:
+    """A compiled plan: the input scenarios, their buckets (one compiled
+    program each) and the device count the plan was costed for."""
+
     scenarios: Tuple[Scenario, ...]
     buckets: Tuple[Bucket, ...]
     ndev: int
 
     def describe(self) -> Dict:
+        """JSON-friendly summary (shape/batch/backend/grid per bucket)."""
         return {
             "n_scenarios": len(self.scenarios),
             "n_buckets": len(self.buckets),
@@ -231,6 +440,7 @@ class ExecutionPlan:
                 "rows": b.cfg.rows, "cols": b.cfg.cols, "batch": b.batch,
                 "backend": b.backend,
                 **({"tiles": list(b.tiles)} if b.backend == "sharded" else {}),
+                **({"grid": list(b.grid)} if b.backend == "composed" else {}),
                 **({"note": b.note} if b.note else {}),
             } for b in self.buckets],
         }
@@ -239,8 +449,23 @@ class ExecutionPlan:
 def compile_plan(scenarios: Sequence[Scenario], ndev: Optional[int] = None,
                  force_backend: Optional[str] = None) -> ExecutionPlan:
     """Bucket scenarios by structural config and choose each bucket's
-    backend.  Deterministic: bucket order follows first appearance in
-    ``scenarios``; per-bucket scenario order follows the input order."""
+    backend and device grid.
+
+    Args:
+        scenarios: the work list — any mix of mesh shapes, apps, seeds
+            and policy knobs.  Scenarios differing only in workload or
+            knobs share a bucket (ONE compiled program).
+        ndev: device count to cost the plan for; defaults to
+            ``len(jax.local_devices())`` (the only reason this function
+            may import jax — pass it explicitly for a pure planning
+            step).
+        force_backend: pin every bucket to ``"sweep"`` / ``"sharded"`` /
+            ``"composed"``; impossible pins degrade per bucket with a
+            note (see :func:`choose_backend`).
+
+    Returns: an :class:`ExecutionPlan`.  Deterministic: bucket order
+    follows first appearance in ``scenarios``; per-bucket scenario order
+    follows the input order."""
     if not scenarios:
         raise ValueError("empty plan")
     for sc in scenarios:
@@ -257,27 +482,41 @@ def compile_plan(scenarios: Sequence[Scenario], ndev: Optional[int] = None,
     for key, idxs in groups.items():
         scs = tuple(scenarios[i] for i in idxs)
         # the knob check must see the *scenario* configs, not the
-        # normalized key: forced-sharded eligibility depends on them
+        # normalized key: forced-sharded/composed eligibility depends on
+        # them (a centralized-directory scenario bars the home-sharded
+        # directory layout both spatial backends require)
         any_central = any(sc.cfg.centralized_directory for sc in scs)
         probe = dataclasses.replace(key, centralized_directory=any_central)
-        backend, tiles, note = choose_backend(probe, len(scs), ndev,
-                                              force_backend)
+        backend, grid, note = choose_backend(probe, len(scs), ndev,
+                                             force_backend)
         buckets.append(Bucket(cfg=key, scenarios=scs, indices=tuple(idxs),
-                              backend=backend, tiles=tiles, note=note))
+                              backend=backend, grid=grid, note=note))
     return ExecutionPlan(tuple(scenarios), tuple(buckets), ndev)
 
 
-def _run_bucket_sweep(b: Bucket, max_cycles: Optional[int],
-                      chunk: int) -> List[Dict[str, int]]:
-    from .sweep import ScenarioSpec, SweepSpec, run_sweep
-    spec = SweepSpec(b.cfg, tuple(
+def _bucket_sweep_spec(b: Bucket):
+    from .sweep import ScenarioSpec, SweepSpec
+    return SweepSpec(b.cfg, tuple(
         ScenarioSpec(
             app=sc.app, seed=sc.seed, refs_per_core=sc.refs_per_core,
             migration_enabled=sc.cfg.migration_enabled,
             migrate_threshold=sc.cfg.migrate_threshold,
             centralized_directory=sc.cfg.centralized_directory,
         ) for sc in b.scenarios))
-    return run_sweep(spec, max_cycles=max_cycles, chunk=chunk)
+
+
+def _run_bucket_sweep(b: Bucket, max_cycles: Optional[int],
+                      chunk: int) -> List[Dict[str, int]]:
+    from .sweep import run_sweep
+    return run_sweep(_bucket_sweep_spec(b), max_cycles=max_cycles,
+                     chunk=chunk)
+
+
+def _run_bucket_composed(b: Bucket, max_cycles: Optional[int],
+                         sharded_chunk: int) -> List[Dict[str, int]]:
+    from .sharded import run_composed
+    return run_composed(_bucket_sweep_spec(b), b.grid,
+                        max_cycles=max_cycles, chunk=sharded_chunk)
 
 
 def _run_bucket_sharded(b: Bucket, max_cycles: Optional[int],
@@ -299,19 +538,33 @@ def _run_bucket_sharded(b: Bucket, max_cycles: Optional[int],
 def execute_plan(plan: ExecutionPlan, max_cycles: Optional[int] = None,
                  chunk: int = 8, sharded_chunk: int = 256
                  ) -> List[Dict[str, int]]:
-    """Run every bucket (one compiled program each) and return one stats
-    dict per scenario, in the original scenario order."""
+    """Run every bucket of ``plan`` (one compiled program each).
+
+    Args:
+        plan: the compiled plan.  A spatial/composed bucket planned for
+            more devices than this process has degrades to the dense
+            sweep backend instead of crashing.
+        max_cycles: per-scenario cycle cap (default: each scenario's
+            ``cfg.max_cycles``).
+        chunk: sweep-backend cycles per in-graph termination check.
+        sharded_chunk: sharded/composed-backend cycles per host-level
+            dispatch (and termination/livelock check).
+
+    Returns: one statistics dict per scenario, in the original scenario
+    order — bit-identical to solo :func:`repro.core.sim.run` calls."""
     out: List[Optional[Dict[str, int]]] = [None] * len(plan.scenarios)
     for b in plan.buckets:
-        if b.backend == "sharded":
+        if b.backend in ("sharded", "composed"):
             # the plan may have been compiled for a different ndev than
             # this process actually has; degrade to the dense backend
             # rather than crash on a short device list
             import jax
-            if len(jax.devices()) >= b.tiles[0] * b.tiles[1]:
+            if len(jax.devices()) < b.devices_needed:
+                res = _run_bucket_sweep(b, max_cycles, chunk)
+            elif b.backend == "sharded":
                 res = _run_bucket_sharded(b, max_cycles, sharded_chunk)
             else:
-                res = _run_bucket_sweep(b, max_cycles, chunk)
+                res = _run_bucket_composed(b, max_cycles, sharded_chunk)
         else:
             res = _run_bucket_sweep(b, max_cycles, chunk)
         for i, r in zip(b.indices, res):

@@ -49,7 +49,7 @@ from .state import (F_DST, F_VALID, P_VALID, R_NFL, Geometry, NodeCtx,
                     SimState, init_state, make_geometry, make_node_ctx)
 
 __all__ = ["cycle_step", "finished", "run", "stats_list", "ExecAux",
-           "VectorSim", "ABORT_LABELS"]
+           "VectorSim", "ABORT_LABELS", "diag_counts"]
 
 I32 = jnp.int32
 
@@ -80,6 +80,26 @@ class ExecAux(NamedTuple):
     wait_data: jnp.ndarray    # nodes in WAIT_DATA at abort
     stalled: jnp.ndarray      # nodes with a backlogged send queue at abort
     dst0: jnp.ndarray         # in-flight flits destined to node 0 at abort
+
+
+def diag_counts(st: np.ndarray, inp: np.ndarray,
+                q_size: np.ndarray) -> Dict[str, np.int32]:
+    """Abort-diagnostic counters from host-side state arrays, keyed like
+    the corresponding :class:`ExecAux` fields (``circ``, ``wait_dir``,
+    ``wait_data``, ``stalled``, ``dst0``).
+
+    Any per-scenario slice shape works — node-flat or grid-shaped — as
+    long as ``inp``'s last axis is the flit-field axis; the sharded and
+    composed host drivers use this to snapshot one scenario at its abort
+    chunk edge, mirroring the in-graph monitor's snapshot."""
+    valid = inp[..., F_VALID] > 0
+    return dict(
+        circ=np.int32(valid.sum()),
+        wait_dir=np.int32((st == ST_WAIT_DIR).sum()),
+        wait_data=np.int32((st == ST_WAIT_DATA).sum()),
+        stalled=np.int32((q_size > 0).sum()),
+        dst0=np.int32((valid & (inp[..., F_DST] == 0)).sum()),
+    )
 
 
 class _Mon(NamedTuple):

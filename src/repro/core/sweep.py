@@ -72,7 +72,20 @@ class ScenarioSpec:
 
 @dataclasses.dataclass(frozen=True)
 class SweepSpec:
-    """A batch of scenarios over one shared mesh/cache/latency config."""
+    """A batch of scenarios over one shared mesh/cache/latency config.
+
+    Attributes:
+        cfg: the sweep-wide structural :class:`SimConfig` — everything
+            that changes array shapes or compiled structure (mesh size,
+            cache geometry, latencies, ``dir_layout``, queue/ROB depths)
+            is shared by all scenarios.
+        scenarios: B :class:`ScenarioSpec` workloads; each may override
+            the traced policy knobs only.
+
+    The stacked workload block is ``(B, num_nodes, M)`` (``-1``-padded
+    to the longest trace, see :meth:`traces`); consumers are
+    :func:`run_sweep` (vmapped) and
+    :func:`repro.core.sharded.run_composed` (batched shard_map)."""
 
     cfg: SimConfig
     scenarios: Tuple[ScenarioSpec, ...]
@@ -155,7 +168,17 @@ def run_sweep(spec: SweepSpec, max_cycles: Optional[int] = None,
               chunk: int = 1) -> List[Dict[str, int]]:
     """Run all scenarios of ``spec`` in one jitted batched loop.
 
-    Returns one stats dict per scenario, in scenario order, bit-identical
+    Args:
+        spec: the sweep — B workloads plus traced knobs over one
+            structural config.  The scenario axis is sharded over the
+            local devices; an indivisible batch is padded with copies of
+            the last scenario (dropped from the results).
+        max_cycles: per-scenario cycle cap (default ``cfg.max_cycles``).
+        chunk: simulated cycles per in-graph termination check (larger =
+            fewer loop-condition evaluations, coarser early exit; the
+            per-cycle tail keeps the cap exact either way).
+
+    Returns: one stats dict per scenario, in scenario order, bit-identical
     to what a solo ``run(sc.resolve_cfg(cfg), trace)`` would produce.
     """
     spec.validate()

@@ -5,18 +5,24 @@
 
 Every mode (except ``--serial``) routes through the execution-plan layer
 (:mod:`repro.core.engine`): scenarios are bucketed by structural config,
-each bucket compiles once, and a cost model picks the batched-sweep or
-spatially-sharded backend per bucket.
+each bucket compiles once, and a cost model picks the batched-sweep,
+spatially-sharded or composed backend per bucket (see
+``docs/architecture.md``).
 
 Batched multi-scenario sweep (one compiled program for all scenarios):
     ... --sweep --apps matmul,equake,mgrid --seeds 0,1
-Spatial sharding over jax.devices() (falls back to the dense backend on a
-single device or an indivisible mesh):
-    ... --sharded
+Force a backend for any planner mode (each degrades to ``sweep`` with an
+explanatory note when structurally impossible on this host):
+    ... --backend sharded
+    ... --sweep --apps matmul --seeds 0,1,2,3 --backend composed
 Heterogeneous plan — mixed mesh shapes/apps/knobs from a manifest (a JSON
 file, inline JSON, or the compact ROWSxCOLS:APP:SEED[:REFS] grammar):
     ... --plan manifest.json
     ... --plan '8x8:matmul:0:50;16x16:equake:1:50'
+
+``docs/cli.md`` is generated from this parser by
+``scripts/gen_cli_docs.py`` (CI fails on drift) — keep flag help strings
+self-contained.
 """
 from __future__ import annotations
 
@@ -24,25 +30,48 @@ import argparse
 import json
 import time
 
+BACKENDS = ("auto", "sweep", "sharded", "composed")
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--rows", type=int, default=16)
-    ap.add_argument("--cols", type=int, default=16)
-    ap.add_argument("--app", default="matmul")
-    ap.add_argument("--refs", type=int, default=100)
-    ap.add_argument("--seed", type=int, default=0)
+
+def build_parser() -> argparse.ArgumentParser:
+    """The launcher's argparse tree (also the source of ``docs/cli.md``)."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.simulate",
+        description="Bufferless-NoC simulator launcher: solo runs, batched "
+                    "sweeps and heterogeneous execution plans, all through "
+                    "the repro.core.engine planner.")
+    ap.add_argument("--rows", type=int, default=16,
+                    help="simulated mesh rows")
+    ap.add_argument("--cols", type=int, default=16,
+                    help="simulated mesh columns")
+    ap.add_argument("--app", default="matmul",
+                    help="workload: a TRACE_APPS name (matmul, apsi, mgrid, "
+                         "wupwise, equake) or 'random'")
+    ap.add_argument("--refs", type=int, default=100,
+                    help="memory references per core")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="trace-synthesis seed")
     ap.add_argument("--centralized", action="store_true",
                     help="paper-default centralized directory (hot spot!)")
-    ap.add_argument("--no-migration", action="store_true")
+    ap.add_argument("--no-migration", action="store_true",
+                    help="disable L2 block migration")
     ap.add_argument("--serial", action="store_true",
-                    help="run the golden-model serial simulator instead")
+                    help="run the golden-model serial simulator instead of "
+                         "the planner")
+    ap.add_argument("--backend", choices=BACKENDS, default="auto",
+                    help="pin the planner's backend for every bucket: "
+                         "'sweep' (vmapped scenario batch), 'sharded' (2-D "
+                         "spatial shard_map), 'composed' (batched shard_map "
+                         "over a scenario x rows x cols device mesh); "
+                         "'auto' lets the cost model choose.  A pinned "
+                         "backend that is structurally impossible degrades "
+                         "to sweep with a note")
     ap.add_argument("--sharded", action="store_true",
-                    help="force the spatial shard_map backend (single-device "
-                         "runs fall back to the dense backend)")
+                    help="legacy alias for --backend sharded")
     ap.add_argument("--sweep", action="store_true",
-                    help="batched sweep: run apps x seeds scenarios in one "
-                         "compiled program (repro.core.sweep)")
+                    help="batched sweep mode: run the --apps x --seeds "
+                         "cross-product as one plan (default backend: "
+                         "sweep; combine with --backend to override)")
     ap.add_argument("--plan", default=None, metavar="MANIFEST",
                     help="scenario manifest: JSON file path, inline JSON, or "
                          "compact 'ROWSxCOLS:APP:SEED[:REFS];...' items; "
@@ -53,15 +82,26 @@ def main() -> None:
                     help="comma list of seeds for --sweep (default: --seed)")
     ap.add_argument("--chunk", type=int, default=8,
                     help="simulated cycles per device-loop termination check")
-    ap.add_argument("--max-cycles", type=int, default=200_000)
-    ap.add_argument("--json", default=None)
+    ap.add_argument("--max-cycles", type=int, default=200_000,
+                    help="hard cycle cap per scenario")
+    ap.add_argument("--json", default=None,
+                    help="also write the result payload to this file")
+    return ap
+
+
+def main() -> None:
+    ap = build_parser()
     args = ap.parse_args()
 
-    modes = [m for m in ("serial", "sharded", "sweep", "plan")
-             if getattr(args, m)]
+    modes = [m for m in ("serial", "sweep", "plan") if getattr(args, m)]
     if len(modes) > 1:
-        ap.error(f"choose at most one of --serial/--sharded/--sweep/--plan "
+        ap.error(f"choose at most one of --serial/--sweep/--plan "
                  f"(got {modes})")
+    if args.serial and (args.sharded or args.backend != "auto"):
+        ap.error("--serial does not route through the planner; "
+                 "--backend/--sharded do not apply")
+    if args.sharded and args.backend not in ("auto", "sharded"):
+        ap.error(f"--sharded conflicts with --backend {args.backend}")
 
     from repro.core.config import SimConfig
     cfg = SimConfig(rows=args.rows, cols=args.cols,
@@ -88,20 +128,21 @@ def main() -> None:
     if args.sweep or args.plan:
         engine.expose_host_devices()
 
+    force = args.backend if args.backend != "auto" else None
+    if args.sharded:
+        force = "sharded"
     if args.plan:
         scenarios = engine.load_manifest(args.plan, base=cfg)
-        force = None
     elif args.sweep:
         apps = (args.apps or args.app).split(",")
         seeds = [int(x) for x in (args.seeds or str(args.seed)).split(",")]
         scenarios = [engine.make_scenario(cfg, app=a, seed=s,
                                           refs_per_core=args.refs)
                      for a in apps for s in seeds]
-        force = "sweep"
+        force = force or "sweep"
     else:
         scenarios = [engine.make_scenario(cfg, app=args.app, seed=args.seed,
                                           refs_per_core=args.refs)]
-        force = "sharded" if args.sharded else None
 
     plan = engine.compile_plan(scenarios, force_backend=force)
     t0 = time.time()

@@ -202,6 +202,56 @@ def test_sharded_backend_via_planner():
         f"no result\nstdout={out.stdout}\nstderr={out.stderr[-2000:]}")
 
 
+def test_composed_backend_mixed_shape_plan_bit_exact():
+    """Acceptance check: a mixed-shape plan forced through the composed
+    backend (8 host devices, scenario x row x col grids) produces
+    per-scenario stats bit-identical to sequential solo runs, in order."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        os.environ["JAX_PLATFORMS"] = "cpu"
+        import sys, json, dataclasses
+        sys.path.insert(0, "src")
+        from repro.core.config import SimConfig
+        from repro.core import engine
+        from repro.core.sim import run
+        from repro.core.trace import app_trace
+
+        base = SimConfig(addr_bits=16, centralized_directory=False)
+        scs = [
+            engine.make_scenario(base, 8, 8, "matmul", 0, 20),
+            engine.make_scenario(base, 4, 4, "equake", 1, 15),
+            engine.make_scenario(base, 8, 8, "mgrid", 2, 20,
+                                 migration_enabled=False),
+            engine.make_scenario(base, 4, 4, "matmul", 3, 15,
+                                 migrate_threshold=1),
+            engine.make_scenario(base, 8, 8, "equake", 4, 20),
+        ]
+        plan = engine.compile_plan(scs, force_backend="composed")
+        got = engine.execute_plan(plan, chunk=4, sharded_chunk=64)
+        ref = [run(dataclasses.replace(sc.cfg, dir_layout="home"),
+                   app_trace(sc.cfg, sc.app, sc.refs_per_core, sc.seed),
+                   chunk=4)
+               for sc in scs]
+        print("RESULT " + json.dumps({
+            "backends": [b.backend for b in plan.buckets],
+            "grids": [list(b.grid) for b in plan.buckets],
+            "match": got == ref}))
+    """)
+    out = subprocess.run([sys.executable, "-c", code], cwd=REPO_ROOT,
+                         capture_output=True, text=True, timeout=900)
+    for line in out.stdout.splitlines():
+        if line.startswith("RESULT "):
+            res = json.loads(line[len("RESULT "):])
+            assert res["backends"] == ["composed", "composed"], res
+            for g in res["grids"]:
+                assert g[0] >= 1 and g[1] * g[2] > 1, res
+            assert res["match"], res
+            return
+    raise AssertionError(
+        f"no result\nstdout={out.stdout}\nstderr={out.stderr[-2000:]}")
+
+
 def test_plan_cli_smoke():
     """`--plan` end to end: compact manifest, two mesh shapes, JSON out."""
     out = subprocess.run(
