@@ -40,7 +40,7 @@ from repro.core.config import SimConfig                    # noqa: E402
 from repro.core.sim import run                             # noqa: E402
 from repro.core.state import init_state                    # noqa: E402
 from repro.core.trace import (                             # noqa: E402
-    app_trace, app_trace_loop, random_trace)
+    app_trace, app_trace_loop, resolve_trace)
 
 
 def bench_trace(args) -> dict:
@@ -89,9 +89,7 @@ def bench_plan(args) -> dict:
     t0 = time.time()
     ref = []
     for sc in scenarios:
-        tr = (random_trace(sc.cfg, sc.refs_per_core, sc.seed)
-              if sc.app == "random"
-              else app_trace(sc.cfg, sc.app, sc.refs_per_core, sc.seed))
+        tr = resolve_trace(sc.cfg, sc.app, sc.refs_per_core, sc.seed)
         ref.append(run(sc.cfg, tr, chunk=args.chunk))
     seq_s = time.time() - t0
 
@@ -160,6 +158,46 @@ def bench_backends(args) -> dict:
     return out
 
 
+def bench_wedge(args) -> dict:
+    """The former S14 ejection-bar wedge (ROADMAP: 16x16 / matmul / seed 0
+    / refs 20, loop-trace generator) as a tracked scenario: with the
+    pending-completion queue it *completes*, so the perf trajectory now
+    records its completion time (cycles + wall) instead of an abort time.
+    The pc_depth=1 escape hatch is timed next to it for the abort
+    baseline."""
+    cfg = SimConfig(rows=16, cols=16, centralized_directory=False,
+                    max_cycles=args.max_cycles)
+    sc = engine.make_scenario(cfg, app="loop:matmul", seed=0,
+                              refs_per_core=20)
+    plan = engine.compile_plan([sc])
+    engine.execute_plan(plan, chunk=16)          # warm the compile cache
+    t0 = time.time()
+    (st,) = engine.execute_plan(plan, chunk=16)
+    wall = time.time() - t0
+
+    import dataclasses
+    cfg1 = dataclasses.replace(cfg, pc_depth=1, livelock_window=256)
+    tr = app_trace_loop(cfg1, "matmul", 20, 0)
+    run(cfg1, tr, chunk=16)                      # warm
+    t0 = time.time()
+    st1 = run(cfg1, tr, chunk=16)
+    wall1 = time.time() - t0
+
+    return {
+        "scenario": "16x16/loop:matmul/seed0/refs20 (former ROADMAP wedge)",
+        "finished": bool(st.get("finished")),
+        "completion_cycles": st.get("cycles"),
+        "completion_wall_s": round(wall, 2),
+        "send_drops_recovered": st.get("send_drop"),
+        "stray_responses": st.get("stray"),
+        "pc_depth_1_baseline": {
+            "aborted": st1.get("aborted"),
+            "abort_cycles": st1.get("cycles"),
+            "abort_wall_s": round(wall1, 2),
+        },
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--trace-rows", type=int, default=256)
@@ -173,6 +211,7 @@ def main() -> None:
                          "instead of extrapolating from --loop-rows/cols")
     ap.add_argument("--skip-plan", action="store_true")
     ap.add_argument("--skip-backends", action="store_true")
+    ap.add_argument("--skip-wedge", action="store_true")
     ap.add_argument("--bk-rows", type=int, default=16)
     ap.add_argument("--bk-cols", type=int, default=16)
     ap.add_argument("--bk-batch", type=int, default=4,
@@ -196,6 +235,8 @@ def main() -> None:
         payload["planned_sweep"] = bench_plan(args)
     if not args.skip_backends:
         payload["backend_shootout"] = bench_backends(args)
+    if not args.skip_wedge:
+        payload["livelock_wedge"] = bench_wedge(args)
     print(json.dumps(payload, indent=1))
     if args.json:
         with open(args.json, "w") as f:
@@ -205,6 +246,8 @@ def main() -> None:
     if not args.skip_backends and \
             not payload["backend_shootout"]["bit_identical_across_backends"]:
         raise SystemExit("backends diverged on the same scenarios")
+    if not args.skip_wedge and not payload["livelock_wedge"]["finished"]:
+        raise SystemExit("former wedge scenario no longer completes")
 
 
 if __name__ == "__main__":

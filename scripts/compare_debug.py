@@ -8,7 +8,7 @@ sys.path.insert(0, "src")
 from repro.core.config import SimConfig, CacheConfig
 from repro.core.ref_serial import SerialSim, STAT_NAMES
 from repro.core.sim import VectorSim
-from repro.core.trace import app_trace, random_trace
+from repro.core.trace import resolve_trace
 from repro.core import state as S
 
 
@@ -21,11 +21,10 @@ def serial_snapshot(ss: SerialSim):
                 inp[node, p] = [1, f.age, f.src, f.dst, f.osrc, f.typ, f.tag,
                                 f.pkt, f.fid, f.nfl]
     qsize = np.array([len(q) for q in ss.sendq])
-    pc = np.zeros((n, 5), np.int64)
+    pc = np.zeros((n, ss.cfg.pc_depth, 5), np.int64)
     for node in range(n):
-        if ss.pending[node] is not None:
-            t, src, osrc, tag = ss.pending[node]
-            pc[node] = [1, t, src, osrc, tag]
+        for i, (t, src, osrc, tag) in enumerate(ss.pending[node]):
+            pc[node, i] = [1, t, src, osrc, tag]
     rob_counts = np.array([len(r) for r in ss.rob])
     return dict(st=ss.st.copy(), ctr=ss.ctr.copy(), tr_ptr=ss.tr_ptr.copy(),
                 pend=ss.pend_addr.copy(), inp=inp, qsize=qsize, pc=pc,
@@ -78,8 +77,7 @@ def compare(a, b, cycle):
 def main(rows=4, cols=4, refs=40, seed=1, app="matmul", cycles=4000, **kw):
     cfg = SimConfig(rows=rows, cols=cols, addr_bits=14,
                     migrate_threshold=2, **kw)
-    tr = app_trace(cfg, app, refs, seed=seed) if app != "random" else \
-        random_trace(cfg, refs, seed=seed)
+    tr = resolve_trace(cfg, app, refs, seed)
     ss = SerialSim(cfg, tr)
     vs = VectorSim(cfg, tr)
     bad = compare(serial_snapshot(ss), vector_snapshot(vs), -1)

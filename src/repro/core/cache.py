@@ -333,39 +333,129 @@ def commit_queue(s: SimState, cfg: SimConfig, descs: List[Desc]):
 NEED_TABLE = jnp.asarray([2, 1, 0, 1, 1, 0, 0, 3, 0, 2], I32)
 
 
+def _l1_install_would_wb(s: SimState, cfg: SimConfig, ctx: NodeCtx,
+                         mask: jnp.ndarray, addr: jnp.ndarray) -> jnp.ndarray:
+    """Need probe: would :func:`install_l1` send a remote victim
+    write-back?  Pure reads — mirrors install_l1's victim selection
+    (first invalid way, else LRU) without the install scatters; must stay
+    in sync with it (and with ``ref_serial._exact_need``'s RA branch)."""
+    node = jnp.arange(addr.shape[0], dtype=I32)
+    _, si, _, present_any = l1_probe(s, cfg, jnp.where(mask, addr, -1))
+    need_i = mask & ~present_any
+    tags = s.l1_tag[node, si]
+    has_inv = jnp.any(tags < 0, axis=1)
+    lru_way = jnp.argmin(s.l1_lru[node, si], axis=1).astype(I32)
+    vowner = s.l1_owner[node, si, lru_way]
+    return need_i & ~has_inv & (vowner >= 0) & (vowner != ctx.node_id)
+
+
+def _l2_install_du_count(s: SimState, cfg: SimConfig, ctx: NodeCtx,
+                         mask: jnp.ndarray, tag2: jnp.ndarray) -> jnp.ndarray:
+    """Need probe: how many remote directory updates (DU packets) would
+    :func:`install_l2` enqueue?  Pure reads — mirrors install_l2's
+    victim selection (invalid way, else non-migrating LRU, else fail)
+    without the install scatters; must stay in sync with it (and with
+    ``ref_serial._exact_need``'s B2 branch)."""
+    node = jnp.arange(tag2.shape[0], dtype=I32)
+    nid = ctx.node_id
+    si, _, present_any = l2_probe(s, cfg, jnp.where(mask, tag2, -1))
+    need_i = mask & ~present_any
+    tags = s.l2_tag[node, si]
+    migf = s.l2_mig[node, si]
+    has_inv = jnp.any(tags < 0, axis=1)
+    lru_key = s.l2_lru[node, si] + migf * BIG
+    lru_way = jnp.argmin(lru_key, axis=1).astype(I32)
+    all_mig = jnp.all(migf > 0, axis=1)
+    do = need_i & ~(~has_inv & all_mig)           # install fails when every
+    vic_valid = do & ~has_inv                     # way is pinned migrating
+    vtag = tags[node, lru_way]
+    duv = vic_valid & (dir_home_v(cfg, vtag, s.knob_central) != nid)
+    dun = do & (dir_home_v(cfg, tag2, s.knob_central) != nid)
+    return duv.astype(I32) + dun.astype(I32)
+
+
 def phase1a(s: SimState, cfg: SimConfig, ctx: NodeCtx) -> SimState:
     n = ctx.node_id.shape[0]
     node = jnp.arange(n, dtype=I32)
     nid = ctx.node_id
     stats = s.stats
 
-    pc_valid = s.pc[:, P_VALID] > 0
-    typ = s.pc[:, P_TYP]
-    src = s.pc[:, P_SRC]
-    osrc = s.pc[:, P_OSRC]
-    tag = s.pc[:, P_TAG]
-    # S14: backpressure — defer until the send queue can hold the response
-    need = NEED_TABLE[jnp.clip(typ, 0, 9)]
-    valid = pc_valid & (s.q_size + need <= cfg.send_queue)
+    # the handler always serves the *head* of the pending-completion queue
+    # (FIFO; depth 1 = the paper's single S14 register)
+    head = s.pc[:, 0]
+    pc_valid = head[:, P_VALID] > 0
+    typ = head[:, P_TYP]
+    src = head[:, P_SRC]
+    osrc = head[:, P_OSRC]
+    tag = head[:, P_TAG]
 
-    is_req = valid & ((typ == MSG_REQ) | (typ == MSG_REQ_FWD))
-    is_ra = valid & (typ == MSG_RA)
+    p_req = pc_valid & ((typ == MSG_REQ) | (typ == MSG_REQ_FWD))
+    p_ra = pc_valid & (typ == MSG_RA)
+    p_da = pc_valid & (typ == MSG_DA)
+    p_dr = pc_valid & (typ == MSG_DR)
+    p_b2 = pc_valid & (typ == MSG_B2)
+    p_wb = pc_valid & (typ == MSG_WB)
+    p_ack = pc_valid & (typ == MSG_MIG_ACK)
+
+    # shared L2 probe on the completion tag (masked by the head's message
+    # type, not by the fire decision — the exact-need gate below must see
+    # the probe before deciding whether the handler fires this cycle)
+    probe_mask = p_req | p_wb | p_ack
+    si, hw, l2hit_any = l2_probe(s, cfg, jnp.where(probe_mask, tag, -1))
+
+    # S14: backpressure — defer until the send queue can hold the response.
+    # pc_depth=1 (the paper's single completion register) gates on the
+    # worst-case NEED table, bit-identical to the seed semantics.  With a
+    # queue (pc_depth > 1) the head is gated on the EXACT number of
+    # packets this handler will enqueue — the drain-from-head half of the
+    # ejection guarantee: a head whose response actually fits never
+    # blocks the queue (the worst-case table could wedge a node whose
+    # send queue hovers one slot short of the worst case forever).
+    if cfg.pc_depth > 1:
+        req_hit_p = p_req & l2hit_any
+        mig_ok_p = (req_hit_p & (s.knob_mig > 0) & (osrc != nid)
+                    & (s.l2_mig[node, si, hw] == 0))
+        streak_p = jnp.where(s.l2_last[node, si, hw] == osrc,
+                             s.l2_streak[node, si, hw] + 1, 1)
+        trig_p = mig_ok_p & (streak_p >= s.knob_mig_thr)
+        ra_ok_p = p_ra & (s.st == ST_WAIT_DATA)
+        ra_wb_p = _l1_install_would_wb(s, cfg, ctx, ra_ok_p, s.pend_addr)
+        b2_du_p = _l2_install_du_count(s, cfg, ctx, p_b2, tag)
+        dr_req_p = p_dr & (s.st == ST_WAIT_DIR) & (osrc >= 0)
+        need = (p_req.astype(I32) + trig_p.astype(I32)        # RA/NACK/FWD + B2
+                + ra_wb_p.astype(I32)                         # RA victim WB
+                + p_da.astype(I32)                            # DR reply
+                + dr_req_p.astype(I32)                        # REQ to owner
+                + p_b2.astype(I32)                            # MIG_ACK
+                + b2_du_p)                                    # install_l2 DUs
+    else:
+        need = NEED_TABLE[jnp.clip(typ, 0, 9)]
+    valid = pc_valid & (s.q_size + need <= cfg.send_queue)
+    if cfg.pc_depth > 1:
+        # guaranteed drain: a FULL queue must make progress every cycle
+        # (its node cannot eject, so it may never get to inject and free
+        # send-queue space on its own) — the head fires even without
+        # space; response packets that do not fit are dropped whole by
+        # commit_queue (send_drop) and recovered by the requester's
+        # req_timeout retry.
+        pc_full = (jnp.sum((s.pc[:, :, P_VALID] > 0).astype(I32), axis=1)
+                   >= cfg.pc_depth)
+        valid = valid | (pc_valid & pc_full)
+
+    is_req = valid & p_req
+    is_ra = valid & p_ra
     is_nack = valid & (typ == MSG_NACK)
-    is_da = valid & (typ == MSG_DA)
-    is_dr = valid & (typ == MSG_DR)
+    is_da = valid & p_da
+    is_dr = valid & p_dr
     is_du = valid & (typ == MSG_DU)
-    is_wb = valid & (typ == MSG_WB)
-    is_b2 = valid & (typ == MSG_B2)
-    is_ack = valid & (typ == MSG_MIG_ACK)
+    is_wb = valid & p_wb
+    is_b2 = valid & p_b2
+    is_ack = valid & p_ack
+    l2hit = (is_req | is_wb | is_ack) & l2hit_any
 
     d0 = empty_desc(n)
     d1 = empty_desc(n)
     d2 = empty_desc(n)
-
-    # shared L2 probe on the completion tag
-    probe_mask = is_req | is_wb | is_ack
-    si, hw, l2hit_any = l2_probe(s, cfg, jnp.where(probe_mask, tag, -1))
-    l2hit = probe_mask & l2hit_any
 
     st, ctr, imode = s.st, s.ctr, s.install_mode
     l2_tag, l2_mig = s.l2_tag, s.l2_mig
@@ -439,6 +529,8 @@ def phase1a(s: SimState, cfg: SimConfig, ctx: NodeCtx) -> SimState:
     d0 = merge_desc(d0, Desc(dr_req, jnp.full(n, MSG_REQ, I32), dr_owner, nid, tag))
     stats = bump(stats, "req_made", dr_req)
     st = jnp.where(dr_req, ST_WAIT_DATA, st)
+    if cfg.pc_depth > 1:   # arm the transaction timeout (see phase1b)
+        ctr = jnp.where(dr_req, cfg.req_timeout, ctr)
     st = jnp.where(dr_mem, ST_WAIT_MEM, st)
     ctr = jnp.where(dr_mem, cfg.mem_cycles, ctr)
     imode = jnp.where(dr_mem, INSTALL_L2, imode)
@@ -518,7 +610,13 @@ def phase1a(s: SimState, cfg: SimConfig, ctx: NodeCtx) -> SimState:
         l2_tag=l2_tag, l2_lru=l2_lru, l2_mig=l2_mig, l2_last=l2_last,
         l2_streak=l2_streak, dir_loc=dir_loc,
         fwd_tag=fwd_tag, fwd_dst=fwd_dst, fwd_ptr=fwd_ptr,
-        pc=jnp.where(valid[:, None], 0, s.pc), stats=stats,
+        # pop the served head: shift the queue down one slot (depth 1:
+        # this zeroes the register, exactly the old behaviour)
+        pc=jnp.where(valid[:, None, None],
+                     jnp.concatenate([s.pc[:, 1:],
+                                      jnp.zeros_like(s.pc[:, :1])], axis=1),
+                     s.pc),
+        stats=stats,
     )
     return commit_queue(s, cfg, [d0, d1, d2])
 
@@ -601,6 +699,8 @@ def phase1b(s: SimState, cfg: SimConfig, ctx: NodeCtx) -> SimState:
 
     d0 = merge_desc(d0, Desc(remote, jnp.full(n, MSG_DA, I32), home, nid, tag2))
     st = jnp.where(remote, ST_WAIT_DIR, st)
+    if cfg.pc_depth > 1:   # arm the transaction timeout
+        ctr = jnp.where(remote | inl_req, cfg.req_timeout, ctr)
 
     # ---- L2_WAIT: countdown then move block into L1 ----
     l2w = (s.st == ST_L2_WAIT)
@@ -631,6 +731,21 @@ def phase1b(s: SimState, cfg: SimConfig, ctx: NodeCtx) -> SimState:
                         ins2.dirw_vic[2])
     dir_loc = dir_write(dir_loc, cfg, ins2.dirw_new[0], ins2.dirw_new[1],
                         ins2.dirw_new[2])
+
+    # ---- WAIT_DIR / WAIT_DATA transaction timeout (pc_depth > 1 only):
+    #      restart with a fresh DA to the tag's home — retransmit-once
+    #      recovery for responses the guaranteed drain had to drop; a
+    #      stale duplicate response later lands in `stray` ----
+    if cfg.pc_depth > 1:
+        wt = (s.st == ST_WAIT_DIR) | (s.st == ST_WAIT_DATA)
+        ctr = jnp.where(wt, ctr - 1, ctr)
+        rt_fire0 = wt & (ctr <= 0)
+        rt_fire = rt_fire0 & (space >= 1)
+        ctr = jnp.where(rt_fire0 & ~rt_fire, 1, ctr)
+        d0 = merge_desc(d0, Desc(rt_fire, jnp.full(n, MSG_DA, I32), home,
+                                 nid, tag2))
+        st = jnp.where(rt_fire, ST_WAIT_DIR, st)
+        ctr = jnp.where(rt_fire, cfg.req_timeout, ctr)
 
     # ---- hit-under-miss (S7) in WAIT_DIR / WAIT_DATA / counting WAIT_MEM ----
     waiting = (s.st == ST_WAIT_DIR) | (s.st == ST_WAIT_DATA) | wm_wait

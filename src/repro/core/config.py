@@ -107,6 +107,31 @@ class SimConfig:
     send_queue: int = 64        # outbound flit-queue depth per node
     max_cycles: int = 200_000
 
+    # Pending-completion queue (ejection guarantee — docs/architecture.md).
+    # The paper's S14 uses a single pending-completion register that bars
+    # ejection while occupied; combined with S14 handler backpressure this
+    # can livelock whole (cfg, trace) combos (the ROADMAP 16x16/matmul
+    # wedge).  pc_depth > 1 turns the register into a small FIFO queue:
+    # an *occupied* (but not full) queue no longer bars ejection, and the
+    # phase-1a handler drains from the queue head.  pc_depth=1 is the
+    # compatibility escape hatch — bit-identical to the single-register
+    # semantics.  (Structural: changes state shapes / compiled programs.)
+    pc_depth: int = 4
+    # Guaranteed-ejection age threshold: with a non-empty (but not full)
+    # completion queue, only flits that have deflected at least this many
+    # times are ejected into the spare capacity; younger flits still see
+    # the paper-faithful ejection bar.  0 = always eject while a slot is
+    # free.  (Traced per-scenario knob — rides as SimState.knob_ej_age.)
+    eject_age_threshold: int = 8
+    # Transaction timeout (pc_depth > 1 only): a node stuck in
+    # WAIT_DIR/WAIT_DATA for this many cycles restarts its transaction
+    # with a fresh DA to the tag's directory home.  This is the
+    # retransmit-once-style recovery that makes the guaranteed drain
+    # safe: a response the saturated handler had to drop (send_drop) is
+    # simply re-requested, and stale duplicates fall into the existing
+    # `stray` accounting.  Static (compiled constant), not a traced knob.
+    req_timeout: int = 256
+
     # Progress monitors (driver-level, repro.core.sim).  They never alter
     # the cycle-by-cycle semantics of a healthy run — they only stop a run
     # early with a diagnostic instead of burning the whole cycle budget.
@@ -154,6 +179,9 @@ class SimConfig:
         assert self.cache.l2_block % self.cache.l1_block == 0
         assert self.migrate_threshold >= 1
         assert self.rob_slots >= 2
+        assert self.pc_depth >= 1, "pending-completion queue needs >= 1 slot"
+        assert self.eject_age_threshold >= 0
+        assert self.req_timeout >= 1
 
 
 # Paper presets -------------------------------------------------------------

@@ -92,10 +92,13 @@ def expose_host_devices() -> None:
 
 #: SimConfig fields carried as traced per-scenario state by the batched
 #: driver (SimState.knob_*) — these never force a new bucket/compile.
+#: ``eject_age_threshold`` is traced (a per-flit comparison constant);
+#: ``pc_depth`` is NOT — it sizes the pending-completion queue array, so
+#: it is structural and splits buckets like every other shape knob.
 KNOB_FIELDS = ("migration_enabled", "migrate_threshold",
-               "centralized_directory")
+               "centralized_directory", "eject_age_threshold")
 _KNOB_NORM = dict(migration_enabled=True, migrate_threshold=3,
-                  centralized_directory=False)
+                  centralized_directory=False, eject_age_threshold=8)
 
 @dataclasses.dataclass(frozen=True)
 class CostConstants:
@@ -188,25 +191,30 @@ class Scenario:
             compile buckets) and what is traced (rides as
             ``SimState.knob_*`` state).
         app: workload name — a :data:`repro.core.trace.TRACE_APPS` key
-            (``matmul``/``apsi``/``mgrid``/``wupwise``/``equake``) or
-            ``"random"`` for the uniform synthetic injector.
+            (``matmul``/``apsi``/``mgrid``/``wupwise``/``equake``),
+            ``"random"`` for the uniform synthetic injector, or a
+            ``loop:``-prefixed app name for the historical per-node-loop
+            generator (exact reproducer of trace-dependent pathologies —
+            see :func:`repro.core.trace.resolve_trace`).
         seed: trace-synthesis seed.
         refs_per_core: memory references each core issues; the synthesized
             trace is ``(cfg.num_nodes, refs_per_core)`` int32 addresses.
     """
 
     cfg: SimConfig
-    app: str = "matmul"            # TRACE_APPS name or "random"
+    app: str = "matmul"            # trace source (trace.resolve_trace)
     seed: int = 0
     refs_per_core: int = 200
 
     def validate(self) -> None:
         """Raise ``ValueError``/``AssertionError`` on an invalid config,
         unknown app name, or non-positive refs_per_core."""
+        from .trace import valid_app
         self.cfg.validate()
-        if self.app != "random" and self.app not in TRACE_APPS:
+        if not valid_app(self.app):
             raise ValueError(f"unknown app {self.app!r}; choose from "
-                             f"{sorted(TRACE_APPS)} or 'random'")
+                             f"{sorted(TRACE_APPS)}, 'random', or a "
+                             "'loop:'-prefixed app name")
         if self.refs_per_core < 1:
             raise ValueError("refs_per_core must be >= 1")
 
@@ -502,6 +510,7 @@ def _bucket_sweep_spec(b: Bucket):
             migration_enabled=sc.cfg.migration_enabled,
             migrate_threshold=sc.cfg.migrate_threshold,
             centralized_directory=sc.cfg.centralized_directory,
+            eject_age_threshold=sc.cfg.eject_age_threshold,
         ) for sc in b.scenarios))
 
 
@@ -524,11 +533,10 @@ def _run_bucket_sharded(b: Bucket, max_cycles: Optional[int],
     import jax
     from jax.sharding import Mesh
     from .sharded import ShardedSim
-    from .trace import app_trace, random_trace
+    from .trace import resolve_trace
     (sc,) = b.scenarios
     cfg = dataclasses.replace(sc.cfg, dir_layout="home")
-    tr = (random_trace(cfg, sc.refs_per_core, sc.seed) if sc.app == "random"
-          else app_trace(cfg, sc.app, sc.refs_per_core, sc.seed))
+    tr = resolve_trace(cfg, sc.app, sc.refs_per_core, sc.seed)
     rt, ct = b.tiles
     devs = np.asarray(jax.devices()[: rt * ct]).reshape(rt, ct)
     mesh = Mesh(devs, ("data", "model"))

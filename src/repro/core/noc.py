@@ -29,6 +29,8 @@ from .state import (
 )
 
 I32 = jnp.int32
+#: larger than any node id or packet counter (pkt wraps at 2**30)
+BIG = jnp.asarray(1 << 30, I32)
 
 
 class ArbResult(NamedTuple):
@@ -64,12 +66,34 @@ def phase2(s: SimState, cfg: SimConfig, ctx: NodeCtx) -> Tuple[SimState, ArbResu
     inp = s.inp
     valid_in = inp[:, :, F_VALID] > 0
 
-    # ---- ejection (S11): oldest (age desc, port asc) deliverable flit;
-    #      S14: paused while the pending-completion register is occupied ----
+    # ---- ejection (S11): oldest (age desc, port asc) deliverable flit.
+    #      S14 + ejection guarantee (pc_depth > 1): with an *empty*
+    #      pending-completion queue any deliverable flit may eject (the
+    #      paper's behaviour); once the queue is occupied, only flits aged
+    #      past the guaranteed-ejection threshold (knob_ej_age) eject —
+    #      into spare queue capacity while a slot is free, and into a free
+    #      ROB slot (buffered ejection: the completion *parks* and is
+    #      promoted into the queue as it drains, see `deliver`) when the
+    #      queue is full.  Parking is what breaks the S14 livelock: an
+    #      ejection frees an input port, which is the only thing that lets
+    #      a saturated node inject, drain its send queue and un-defer its
+    #      completion handler.  pc_depth=1 keeps the paper's exact
+    #      single-register bar (no ejection while occupied). ----
     acc = rob_accepts(s, inp)
-    pc_free = (s.pc[:, P_VALID] == 0)
-    want_ej = (valid_in & (inp[:, :, F_DST] == nid[:, None]) & acc
-               & pc_free[:, None])
+    pc_cnt = jnp.sum((s.pc[:, :, P_VALID] > 0).astype(I32), axis=1)
+    pc_empty = pc_cnt == 0
+    if cfg.pc_depth > 1:
+        pc_has_slot = pc_cnt < cfg.pc_depth
+        rob_free = jnp.any(s.rob[:, :, R_NFL] == 0, axis=1)
+        # single-flit packets need a free ROB slot to park in; a
+        # completing multi-flit packet parks in its own (matched) slot
+        park_ok = (inp[:, :, F_NFL] > 1) | rob_free[:, None]
+        old_enough = inp[:, :, F_AGE] >= s.knob_ej_age
+        ej_ok = (pc_empty[:, None]
+                 | (old_enough & (pc_has_slot[:, None] | park_ok)))
+    else:
+        ej_ok = pc_empty[:, None]
+    want_ej = (valid_in & (inp[:, :, F_DST] == nid[:, None]) & acc & ej_ok)
     ej_key = jnp.where(want_ej,
                        inp[:, :, F_AGE] * 4 + (3 - jnp.arange(4, dtype=I32)),
                        -1)
@@ -106,7 +130,7 @@ def phase2(s: SimState, cfg: SimConfig, ctx: NodeCtx) -> Tuple[SimState, ArbResu
     wanted_eject = cand_valid & (dst == nid[:, None])
     assigned, deflect = kops.arbitrate(
         cand[:, :, F_AGE], cand_valid, wanted_eject, dc_, dr_, vp,
-        backend="pallas" if getattr(cfg, "use_pallas_router", False) else "ref")
+        backend="pallas" if cfg.use_pallas_router else "ref")
 
     # ---- scatter candidates to their output ports (ports are distinct) ----
     new_age = cand[:, :, F_AGE] + deflect.astype(I32)
@@ -142,21 +166,61 @@ def transfer_global(cfg: SimConfig, geo: Geometry, out: jnp.ndarray) -> jnp.ndar
 
 def deliver(s: SimState, cfg: SimConfig, ctx: NodeCtx, arb: ArbResult,
             inp_next: jnp.ndarray) -> SimState:
-    """Shared phase-3 tail: hop stats, ejection into ROB, completions."""
+    """Shared phase-3 tail: hop stats, ejection into ROB, completions.
+
+    Per-node order (identical in :class:`repro.core.ref_serial.SerialSim`):
+
+    1. *Promotion* — if the pending-completion queue has a free slot and
+       the ROB holds a parked completion (a slot whose count reached its
+       flit total while the queue was full), the parked completion with
+       the smallest ``(src, pkt)`` moves to the queue tail and its ROB
+       slot is freed.
+    2. *Ejected flit* — a single-flit packet (or the flit completing a
+       multi-flit packet) becomes a pending completion: appended at the
+       queue tail when a slot is free, otherwise *parked* in the ROB
+       (its own slot for multi-flit packets; a fresh slot for singles —
+       phase2's ejection gate guaranteed one exists).
+
+    At ``pc_depth=1`` nothing ever parks (phase2 only ejects into an
+    empty queue), so both steps reduce to the seed's single-register
+    behaviour bit-identically.
+    """
     n = ctx.node_id.shape[0]
     node = jnp.arange(n, dtype=I32)
+    depth = cfg.pc_depth
 
     stats = bump(s.stats, "hops", arb.out[:, :, F_VALID])
 
-    # ---- ejection into ROB / pending register ----
+    # ---- promotion: oldest parked completion -> pending-queue tail ----
+    rob = s.rob
+    rob_valid = rob[:, :, R_NFL] > 0
+    pc_cnt = jnp.sum((s.pc[:, :, P_VALID] > 0).astype(I32), axis=1)
+    parked = rob_valid & (rob[:, :, R_CNT] >= rob[:, :, R_NFL])
+    # deterministic, model-independent pick: smallest (src, pkt).  pkt is
+    # a per-source counter, so the pair is unique among parked slots.
+    src_k = jnp.where(parked, rob[:, :, R_SRC], BIG)
+    min_src = jnp.min(src_k, axis=1)
+    pkt_k = jnp.where(parked & (rob[:, :, R_SRC] == min_src[:, None]),
+                      rob[:, :, R_PKT], BIG)
+    psel = jnp.argmin(pkt_k, axis=1).astype(I32)
+    can_prom = jnp.any(parked, axis=1) & (pc_cnt < depth)
+    prow = rob[node, psel]
+    prom_pc = jnp.stack([jnp.ones(n, I32), prow[:, R_TYP], prow[:, R_SRC],
+                         prow[:, R_OSRC], prow[:, R_TAG]], axis=-1)
+    tail0 = jnp.clip(pc_cnt, 0, depth - 1)
+    pc = s.pc.at[node, tail0].set(
+        jnp.where(can_prom[:, None], prom_pc, s.pc[node, tail0]))
+    rob = rob.at[node, psel].set(jnp.where(can_prom[:, None], 0, prow))
+    pc_cnt = pc_cnt + can_prom.astype(I32)
+
+    # ---- ejection into ROB / pending queue ----
     f = s.inp[node, arb.ej_port]                             # (Nl, F) pre-arb flit
     he = arb.has_ej
     stats = bump(stats, "flits_delivered", he)
     single = he & (f[:, F_NFL] == 1)
     multi = he & (f[:, F_NFL] > 1)
 
-    rob = s.rob
-    rob_valid = rob[:, :, R_NFL] > 0
+    rob_valid = rob[:, :, R_NFL] > 0                         # post promotion
     m = (rob_valid & (rob[:, :, R_SRC] == f[:, None, F_SRC])
          & (rob[:, :, R_PKT] == f[:, None, F_PKT]))          # (Nl, K)
     has_match = jnp.any(m, axis=1)
@@ -171,23 +235,38 @@ def deliver(s: SimState, cfg: SimConfig, ctx: NodeCtx, arb: ArbResult,
     cnt = row[:, R_CNT] + multi.astype(I32)
     row = row.at[:, R_CNT].set(cnt)
     complete_m = multi & (cnt >= row[:, R_NFL])
-    # a completed slot is freed (zeroed)
-    full_row = jnp.where(newslot[:, None], init_row, cur)
-    full_row = full_row.at[:, R_CNT].set(cnt)
-    row = jnp.where(complete_m[:, None], 0, row)
+    full_row = row                    # snapshot before the zeroing below
+
+    completion = single | complete_m
+    to_pc = completion & (pc_cnt < depth)
+    to_park = completion & ~to_pc
+    # a completed slot is freed when its completion enters the queue, and
+    # kept (count == total: the "parked" marker) when the queue is full
+    row = jnp.where((complete_m & ~to_park)[:, None], 0, row)
     rob = rob.at[node, slot].set(jnp.where(multi[:, None], row, cur))
 
-    pc_valid = single | complete_m
-    pc = jnp.stack([
-        pc_valid.astype(I32),
+    # park a single-flit completion in a fresh slot (guaranteed free by
+    # phase2's ejection gate)
+    rob_valid2 = rob[:, :, R_NFL] > 0
+    park_idx = jnp.argmax(~rob_valid2, axis=1).astype(I32)
+    park_row = jnp.stack([f[:, F_SRC], f[:, F_PKT], f[:, F_TYP], f[:, F_TAG],
+                          f[:, F_OSRC], jnp.ones(n, I32), jnp.ones(n, I32)],
+                         axis=-1)
+    single_park = single & to_park
+    rob = rob.at[node, park_idx].set(
+        jnp.where(single_park[:, None], park_row, rob[node, park_idx]))
+
+    row_pc = jnp.stack([
+        to_pc.astype(I32),
         jnp.where(single, f[:, F_TYP], full_row[:, R_TYP]),
         jnp.where(single, f[:, F_SRC], full_row[:, R_SRC]),
         jnp.where(single, f[:, F_OSRC], full_row[:, R_OSRC]),
         jnp.where(single, f[:, F_TAG], full_row[:, R_TAG]),
     ], axis=-1)
-    pc = pc * pc_valid[:, None].astype(I32)
-    # S14: preserve an occupied register (its node was barred from ejecting)
-    pc = jnp.where(pc_valid[:, None], pc, s.pc)
+    row_pc = row_pc * to_pc[:, None].astype(I32)
+    tail = jnp.clip(pc_cnt, 0, depth - 1)
+    pc = pc.at[node, tail].set(
+        jnp.where(to_pc[:, None], row_pc, pc[node, tail]))
 
     return s._replace(inp=inp_next, rob=rob, pc=pc, stats=stats)
 

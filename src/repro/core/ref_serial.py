@@ -126,8 +126,11 @@ class SerialSim:
 
         # --- reorder buffer: per node, list of [src, pkt, typ, tag, osrc, nfl, count]
         self.rob: List[List[List[int]]] = [[] for _ in range(n)]
-        self.pending: List[Optional[Tuple[int, int, int, int]]] = [None] * n
-        # pending completion = (typ, src, osrc, tag)
+        # pending-completion queue: per node, FIFO of (typ, src, osrc, tag)
+        # capped at cfg.pc_depth (depth 1 = the paper's single S14
+        # register; deeper queues enable the ejection guarantee, see
+        # phase2)
+        self.pending: List[List[Tuple[int, int, int, int]]] = [[] for _ in range(n)]
 
         self.stats: Dict[str, int] = {k: 0 for k in STAT_NAMES}
         self.cycle = 0
@@ -280,16 +283,97 @@ class SerialSim:
     def q_space(self, node: int) -> int:
         return self.cfg.send_queue - len(self.sendq[node])
 
+    def _exact_need(self, node: int, comp: Tuple[int, int, int, int]) -> int:
+        """Exact number of packets the handler for ``comp`` will enqueue
+        (the pc_depth > 1 drain-from-head gate; mirrors each handler's
+        enqueue sites without mutating state)."""
+        typ, src, osrc, tag = comp
+        cfg = self.cfg
+        if typ in (MSG_REQ, MSG_REQ_FWD):
+            hit = self.l2_probe(node, tag)
+            if hit is None:
+                return 1                       # REQ_FWD or NACK
+            s, w = hit
+            trig = False
+            if (cfg.migration_enabled and osrc != node
+                    and not self.l2_mig[node, s, w]):
+                streak = (self.l2_streak[node, s, w] + 1
+                          if self.l2_last_req[node, s, w] == osrc else 1)
+                trig = streak >= cfg.migrate_threshold
+            return 1 + (1 if trig else 0)      # RA + maybe B2
+        if typ == MSG_RA:
+            if self.st[node] != ST_WAIT_DATA:
+                return 0                       # stray
+            # would install_l1 write back a remote-owned victim?
+            ca = cfg.cache
+            addr = int(self.pend_addr[node])
+            t1 = addr >> ca.l1_shift
+            s = t1 % ca.l1_sets
+            if self.l1_probe(node, addr) is not None:
+                return 0
+            for w in range(ca.l1_ways):
+                if self.l1_tag[node, s, w] < 0:
+                    return 0                   # free way, no victim
+            way = int(np.argmin(self.l1_lru[node, s]))
+            vowner = int(self.l1_owner[node, s, way])
+            return 1 if (vowner >= 0 and vowner != node) else 0
+        if typ == MSG_DA:
+            return 1                           # DR reply
+        if typ == MSG_DR:
+            return 1 if (self.st[node] == ST_WAIT_DIR and osrc >= 0) else 0
+        if typ == MSG_B2:
+            # MIG_ACK + one DU per remote directory update of install_l2
+            ca = cfg.cache
+            if self.l2_probe(node, tag) is not None:
+                return 1
+            s = tag % ca.l2_sets
+            cnt = 1
+            way = -1
+            for w in range(ca.l2_ways):
+                if self.l2_tag[node, s, w] < 0:
+                    way = w
+                    break
+            if way < 0:
+                best = None
+                for w in range(ca.l2_ways):
+                    if self.l2_mig[node, s, w]:
+                        continue
+                    k = (int(self.l2_lru[node, s, w]), w)
+                    if best is None or k < best[0]:
+                        best = (k, w)
+                if best is None:
+                    return 1                   # install fails: MIG_ACK only
+                vtag = int(self.l2_tag[node, s, best[1]])
+                if cfg.dir_home(vtag) != node:
+                    cnt += 1
+            if cfg.dir_home(tag) != node:
+                cnt += 1
+            return cnt
+        return 0                               # NACK / DU / WB / MIG_ACK
+
     def phase1a(self, node: int) -> None:
-        comp = self.pending[node]
-        if comp is None:
+        if not self.pending[node]:
             return
+        comp = self.pending[node][0]   # FIFO: always serve the head
         # S14: backpressure — defer processing until the send queue can hold
-        # the worst-case response; the completion register stays occupied,
-        # which pauses further ejection at this node (see phase2).
-        if self.q_space(node) < self.NEED[comp[0]]:
-            return
-        self.pending[node] = None
+        # the response; the completion queue head stays occupied, which
+        # restricts further ejection at this node (see phase2).  pc_depth=1
+        # gates on the worst-case NEED table (the paper's register
+        # semantics, bit-identical to the seed); a deeper queue gates on
+        # the exact response count so a head whose response actually fits
+        # never blocks the drain (the ejection guarantee's second half).
+        need = (self.NEED[comp[0]] if self.cfg.pc_depth == 1
+                else self._exact_need(node, comp))
+        if self.q_space(node) < need:
+            # guaranteed drain (pc_depth > 1): a FULL queue must make
+            # progress every cycle (its node cannot eject, so it may never
+            # get to inject and free send-queue space on its own) — the
+            # head fires anyway; responses that do not fit are dropped
+            # whole (send_drop) and recovered by the req_timeout retry.
+            if not (self.cfg.pc_depth > 1
+                    and len(self.pending[node]) >= self.cfg.pc_depth):
+                return
+        self.pending[node].pop(0)
         typ, src, osrc, tag = comp
         cfg = self.cfg
         if typ in (MSG_REQ, MSG_REQ_FWD):
@@ -349,6 +433,8 @@ class SerialSim:
                     self.enqueue(node, MSG_REQ, owner, node, tag)
                     self.stats["req_made"] += 1
                     self.st[node] = ST_WAIT_DATA
+                    if cfg.pc_depth > 1:   # arm the transaction timeout
+                        self.ctr[node] = cfg.req_timeout
                 else:
                     self.st[node] = ST_WAIT_MEM
                     self.ctr[node] = cfg.mem_cycles
@@ -451,6 +537,8 @@ class SerialSim:
                     self.enqueue(node, MSG_REQ, owner, node, tag2)
                     self.stats["req_made"] += 1
                     self.st[node] = ST_WAIT_DATA
+                    if cfg.pc_depth > 1:   # arm the transaction timeout
+                        self.ctr[node] = cfg.req_timeout
                 else:
                     self.dir_loc[tag2] = node   # reserve
                     self.st[node] = ST_WAIT_MEM
@@ -460,6 +548,8 @@ class SerialSim:
             else:
                 self.enqueue(node, MSG_DA, home, node, tag2)
                 self.st[node] = ST_WAIT_DIR
+                if cfg.pc_depth > 1:   # arm the transaction timeout
+                    self.ctr[node] = cfg.req_timeout
             return
         if st == ST_L2_WAIT:
             self.ctr[node] -= 1
@@ -491,6 +581,19 @@ class SerialSim:
             self.st[node] = ST_IDLE
             return
         # ST_WAIT_DIR / ST_WAIT_DATA
+        if cfg.pc_depth > 1:
+            # transaction timeout: restart with a fresh DA to the tag's
+            # home — retransmit-once recovery for responses the
+            # guaranteed drain had to drop (stale duplicates -> `stray`)
+            self.ctr[node] -= 1
+            if self.ctr[node] <= 0:
+                if self.q_space(node) < 1:      # S14: hold the retry
+                    self.ctr[node] = 1
+                else:
+                    tag2 = int(self.pend_addr[node]) >> ca.l2_shift
+                    self.enqueue(node, MSG_DA, cfg.dir_home(tag2), node, tag2)
+                    self.st[node] = ST_WAIT_DIR
+                    self.ctr[node] = cfg.req_timeout
         self._consume_hit_under_miss(node)
 
     # -- phase 2: arbitration ---------------------------------------------------
@@ -531,14 +634,35 @@ class SerialSim:
         vp = self.valid_ports(node)
 
         # S11: ejection — oldest (age desc, port asc) flit destined here that
-        # the ROB can accept; at most one per cycle.  S14: no ejection while
-        # the pending-completion register is occupied (backpressure).
+        # the ROB can accept; at most one per cycle.  S14 + ejection
+        # guarantee (pc_depth > 1): with an empty pending-completion queue
+        # any deliverable flit may eject (the paper's behaviour); once the
+        # queue is occupied only flits aged past cfg.eject_age_threshold
+        # eject — into spare queue capacity while a slot is free, and into
+        # a free ROB slot (buffered ejection; the completion parks and is
+        # promoted as the queue drains, see phase3) when the queue is full.
+        # pc_depth=1 keeps the paper's exact single-register bar.
         eject: Optional[Tuple[int, Flit]] = None
-        if self.pending[node] is None:
-            for p, f in sorted(flits, key=lambda pf: (-pf[1].age, pf[0])):
-                if f.dst == node and self.rob_can_accept(node, f):
-                    eject = (p, f)
-                    break
+        pcq = self.pending[node]
+        depth = self.cfg.pc_depth
+
+        def ej_allowed(f: Flit) -> bool:
+            if not pcq:
+                return self.rob_can_accept(node, f)
+            if depth == 1 or f.age < self.cfg.eject_age_threshold:
+                return False
+            if len(pcq) < depth:
+                return self.rob_can_accept(node, f)
+            # queue full — parking path: a single-flit completion needs a
+            # fresh ROB slot; a multi-flit flit parks in its own slot
+            if f.nfl == 1:
+                return len(self.rob[node]) < self.cfg.rob_slots
+            return self.rob_can_accept(node, f)
+
+        for p, f in sorted(flits, key=lambda pf: (-pf[1].age, pf[0])):
+            if f.dst == node and ej_allowed(f):
+                eject = (p, f)
+                break
         remaining = [(p, f) for p, f in flits if eject is None or p != eject[0]]
 
         # S12: injection — head of the send queue joins arbitration iff the
@@ -600,15 +724,29 @@ class SerialSim:
                     nb, back = r * cfg.cols + (c - 1), PORT_E
                 new_inp[nb][back] = f
         self.inp = new_inp
+        depth = self.cfg.pc_depth
         for node in range(n):
+            pcq = self.pending[node]
+            # promotion: the parked completion (count reached its flit
+            # total while the queue was full) with the smallest (src, pkt)
+            # enters the queue tail — same rule as the vectorized deliver
+            parked = [s for s in self.rob[node] if s[6] >= s[5]]
+            if parked and len(pcq) < depth:
+                sl = min(parked, key=lambda s: (s[0], s[1]))
+                pcq.append((sl[2], sl[0], sl[4], sl[3]))
+                self.rob[node].remove(sl)
             ej = all_eject[node]
             if ej is None:
                 continue
             f = ej[1]
             self.stats["flits_delivered"] += 1
             if f.nfl == 1:
-                assert self.pending[node] is None
-                self.pending[node] = (f.typ, f.src, f.osrc, f.tag)
+                if len(pcq) < depth:
+                    pcq.append((f.typ, f.src, f.osrc, f.tag))
+                else:   # park (phase2 guaranteed a free slot)
+                    assert len(self.rob[node]) < self.cfg.rob_slots
+                    self.rob[node].append(
+                        [f.src, f.pkt, f.typ, f.tag, f.osrc, 1, 1])
                 continue
             slot = None
             for s in self.rob[node]:
@@ -620,9 +758,10 @@ class SerialSim:
                 self.rob[node].append(slot)
             slot[6] += 1
             if slot[6] == slot[5]:
-                assert self.pending[node] is None
-                self.pending[node] = (slot[2], slot[0], slot[4], slot[3])
-                self.rob[node].remove(slot)
+                if len(pcq) < depth:
+                    pcq.append((slot[2], slot[0], slot[4], slot[3]))
+                    self.rob[node].remove(slot)
+                # else: the completed slot stays parked (count == total)
 
     # -- driver ----------------------------------------------------------------
     def network_empty(self) -> bool:
@@ -632,7 +771,7 @@ class SerialSim:
             return False
         if any(self.rob[n] for n in range(self.cfg.num_nodes)):
             return False
-        if any(p is not None for p in self.pending):
+        if any(self.pending):
             return False
         return True
 

@@ -315,9 +315,9 @@ class ShardedSim:
             block-partitioned over.
         batch_axes: mesh axes for the scenario dim (composed backend);
             empty for the classic 2-D spatial decomposition.
-        knobs: optional ``(migration, threshold, centralized)`` int32
-            vectors of length B — per-scenario traced policy knobs, as
-            produced by :meth:`repro.core.sweep.SweepSpec.knob_arrays`.
+        knobs: optional ``(migration, threshold, centralized, eject_age)``
+            int32 vectors of length B — per-scenario traced policy knobs,
+            as produced by :meth:`repro.core.sweep.SweepSpec.knob_arrays`.
 
     :meth:`run` returns one stats dict (solo) or a list of B dicts
     (batched), each bit-identical to the corresponding solo
@@ -328,7 +328,7 @@ class ShardedSim:
                  col_axes: Tuple[str, ...] = ("model",),
                  batch_axes: Tuple[str, ...] = (),
                  knobs: Optional[Tuple[np.ndarray, np.ndarray,
-                                       np.ndarray]] = None):
+                                       np.ndarray, np.ndarray]] = None):
         nrow = int(np.prod([mesh.shape[a] for a in row_axes]))
         ncol = int(np.prod([mesh.shape[a] for a in col_axes]))
         assert cfg.rows % nrow == 0 and cfg.cols % ncol == 0, \
@@ -347,10 +347,11 @@ class ShardedSim:
         self.batch = trace.shape[0] if batch_axes else None
         s = init_state(cfg, trace)
         if knobs is not None:
-            mig, thr, cen = knobs
+            mig, thr, cen, eja = knobs
             s = s._replace(knob_mig=jnp.asarray(mig, I32),
                            knob_mig_thr=jnp.asarray(thr, I32),
-                           knob_central=jnp.asarray(cen, I32))
+                           knob_central=jnp.asarray(cen, I32),
+                           knob_ej_age=jnp.asarray(eja, I32))
         s = to_grid(s, cfg)
         specs = state_specs(cfg, row_axes, col_axes, batch_axes)
         self.state = jax.device_put(
@@ -517,12 +518,12 @@ def run_composed(spec, grid: Tuple[int, int, int],
     spec = SweepSpec(cfg, spec.scenarios)
     spec.validate()
     traces = spec.traces()
-    mig, thr, cen = spec.knob_arrays()
+    mig, thr, cen, eja = spec.knob_arrays()
     pad = (-spec.size) % bs
     if pad:
         traces = np.concatenate([traces, np.repeat(traces[-1:], pad, 0)])
-        mig, thr, cen = (np.concatenate([a, np.repeat(a[-1:], pad, 0)])
-                         for a in (mig, thr, cen))
+        mig, thr, cen, eja = (np.concatenate([a, np.repeat(a[-1:], pad, 0)])
+                              for a in (mig, thr, cen, eja))
     devs = list(devices if devices is not None else jax.devices())
     need = bs * rt * ct
     if len(devs) < need:
@@ -532,5 +533,5 @@ def run_composed(spec, grid: Tuple[int, int, int],
                 ("scenario", "data", "model"))
     sim = ShardedSim(cfg, traces, mesh, row_axes=("data",),
                      col_axes=("model",), batch_axes=("scenario",),
-                     knobs=(mig, thr, cen))
+                     knobs=(mig, thr, cen, eja))
     return sim.run(max_cycles, chunk=chunk)[:spec.size]

@@ -19,8 +19,11 @@ Progress monitors (carried inside the compiled loop, per scenario):
   counters ``hops``/``deflections``) changes for
   ``cfg.livelock_window_effective`` consecutive cycles while the scenario
   is unfinished.  This catches the S14 backpressure/ejection-bar cycles
-  catalogued in ROADMAP (flits keep circulating — hops keep rising — but
-  nothing retires) without burning ``max_cycles``.
+  the paper-faithful ``pc_depth=1`` register admits (flits keep
+  circulating — hops keep rising — but nothing retires) without burning
+  ``max_cycles``; at the default ``pc_depth`` the pending-completion
+  queue's ejection guarantee resolves those cycles and the monitor
+  watches them run to completion (docs/architecture.md).
 * **Directory saturation** — on centralized-directory scenarios at >= 256
   nodes, evaluated every ``cfg.sat_window`` cycles: at least half the
   nodes sit in WAIT_DIR/WAIT_DATA while fewer than ``num_nodes/2``

@@ -9,7 +9,9 @@ Flit field order (axis -1 of ``inp`` / arbitration candidates):
     0 VALID, 1 AGE, 2 SRC, 3 DST, 4 OSRC, 5 TYP, 6 TAG, 7 PKT, 8 FID, 9 NFL
 Send-queue descriptor fields: 0 TYP, 1 DST, 2 OSRC, 3 TAG, 4 PKT, 5 NFL
 ROB slot fields: 0 SRC, 1 PKT, 2 TYP, 3 TAG, 4 OSRC, 5 NFL, 6 CNT
-Pending-completion fields: 0 VALID, 1 TYP, 2 SRC, 3 OSRC, 4 TAG
+Pending-completion slot fields: 0 VALID, 1 TYP, 2 SRC, 3 OSRC, 4 TAG
+(the pending-completion state is a per-node FIFO of ``cfg.pc_depth`` such
+slots, head at index 0 — depth 1 is the paper's single S14 register)
 """
 from __future__ import annotations
 
@@ -71,8 +73,8 @@ class SimState(NamedTuple):
     q_fid: jnp.ndarray       # (N,)  flit cursor of head packet
     # reorder buffer
     rob: jnp.ndarray         # (N, K, NUM_R)
-    # pending completion register
-    pc: jnp.ndarray          # (N, NUM_P)
+    # pending-completion queue (head at slot 0; depth 1 = S14 register)
+    pc: jnp.ndarray          # (N, pc_depth, NUM_P)
     # statistics + clock
     stats: jnp.ndarray       # (NUM_STATS,) int32
     cycle: jnp.ndarray       # () int32
@@ -84,6 +86,7 @@ class SimState(NamedTuple):
     knob_mig: jnp.ndarray      # () int32 — migration enabled?
     knob_mig_thr: jnp.ndarray  # () int32 — migration streak threshold
     knob_central: jnp.ndarray  # () int32 — centralized directory?
+    knob_ej_age: jnp.ndarray   # () int32 — guaranteed-ejection age threshold
 
 
 class Geometry(NamedTuple):
@@ -176,13 +179,14 @@ def init_state(cfg: SimConfig, trace: np.ndarray) -> SimState:
         q_desc=z(n, cfg.send_queue + 1, NUM_Q),   # +1 = commit sink slot
         q_head=z(n), q_size=z(n), q_fid=z(n),
         rob=z(n, cfg.rob_slots, NUM_R),
-        pc=z(n, NUM_P),
+        pc=z(n, cfg.pc_depth, NUM_P),
         stats=z(NUM_STATS),
         cycle=z(),
         trace=jnp.asarray(trace, i32),
         knob_mig=knob(int(cfg.migration_enabled)),
         knob_mig_thr=knob(cfg.migrate_threshold),
         knob_central=knob(int(cfg.centralized_directory)),
+        knob_ej_age=knob(cfg.eject_age_threshold),
     )
 
 

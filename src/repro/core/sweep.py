@@ -50,12 +50,13 @@ class ScenarioSpec:
 
     ``None`` knobs inherit the sweep-wide :class:`SimConfig` value."""
 
-    app: str = "matmul"            # TRACE_APPS name or "random"
+    app: str = "matmul"            # trace source (see trace.resolve_trace)
     seed: int = 0
     refs_per_core: int = 200
     migration_enabled: Optional[bool] = None
     migrate_threshold: Optional[int] = None
     centralized_directory: Optional[bool] = None
+    eject_age_threshold: Optional[int] = None
 
     def resolve_cfg(self, cfg: SimConfig) -> SimConfig:
         """This scenario's effective SimConfig (the sequential path runs
@@ -67,6 +68,8 @@ class ScenarioSpec:
             kw["migrate_threshold"] = self.migrate_threshold
         if self.centralized_directory is not None:
             kw["centralized_directory"] = self.centralized_directory
+        if self.eject_age_threshold is not None:
+            kw["eject_age_threshold"] = self.eject_age_threshold
         return dataclasses.replace(cfg, **kw) if kw else cfg
 
 
@@ -124,13 +127,16 @@ class SweepSpec:
         of the engine)."""
         return self._traces
 
-    def knob_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Per-scenario (migration, threshold, centralized) int32 vectors."""
+    def knob_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                   np.ndarray]:
+        """Per-scenario (migration, threshold, centralized, eject-age)
+        int32 vectors — one entry per traced ``SimState.knob_*`` leaf."""
         res = [sc.resolve_cfg(self.cfg) for sc in self.scenarios]
         mig = np.asarray([int(c.migration_enabled) for c in res], np.int32)
         thr = np.asarray([c.migrate_threshold for c in res], np.int32)
         cen = np.asarray([int(c.centralized_directory) for c in res], np.int32)
-        return mig, thr, cen
+        eja = np.asarray([c.eject_age_threshold for c in res], np.int32)
+        return mig, thr, cen, eja
 
 
 def scenario_device_count(batch: int, ndev: int) -> int:
@@ -184,7 +190,7 @@ def run_sweep(spec: SweepSpec, max_cycles: Optional[int] = None,
     spec.validate()
     cfg = spec.cfg
     traces = spec.traces()
-    mig, thr, cen = spec.knob_arrays()
+    mig, thr, cen, eja = spec.knob_arrays()
     # pad an indivisible batch up to a multiple of the device count with
     # copies of the last scenario (dropped from the results): 5 scenarios
     # on 4 devices would otherwise collapse to a single device.  Copies
@@ -194,12 +200,13 @@ def run_sweep(spec: SweepSpec, max_cycles: Optional[int] = None,
                                                len(jax.local_devices()))
     if pad:
         traces = np.concatenate([traces, np.repeat(traces[-1:], pad, 0)])
-        mig, thr, cen = (np.concatenate([a, np.repeat(a[-1:], pad, 0)])
-                         for a in (mig, thr, cen))
+        mig, thr, cen, eja = (np.concatenate([a, np.repeat(a[-1:], pad, 0)])
+                              for a in (mig, thr, cen, eja))
     s = init_state(cfg, traces)
     s = s._replace(knob_mig=jnp.asarray(mig),
                    knob_mig_thr=jnp.asarray(thr),
-                   knob_central=jnp.asarray(cen))
+                   knob_central=jnp.asarray(cen),
+                   knob_ej_age=jnp.asarray(eja))
     s = _maybe_shard(s, spec.size + pad)
     s, aux = _run_jit(s, cfg,
                       jnp.asarray(max_cycles or cfg.max_cycles, jnp.int32),

@@ -35,6 +35,7 @@ __all__ = [
     "app_trace",
     "app_trace_loop",
     "random_trace",
+    "resolve_trace",
     "from_model_schedule",
     "stacked_traces",
     "TRACE_APPS",
@@ -242,13 +243,37 @@ def app_trace_loop(cfg: SimConfig, app: str, refs_per_core: int = 200, seed: int
     return out.astype(np.int32)
 
 
+def valid_app(app: str) -> bool:
+    """Is ``app`` a name :func:`resolve_trace` accepts?"""
+    name = app[5:] if app.startswith("loop:") else app
+    return name == "random" or name in TRACE_APPS
+
+
+def resolve_trace(cfg: SimConfig, app: str, refs_per_core: int,
+                  seed: int) -> np.ndarray:
+    """Trace-source dispatch shared by every scenario consumer.
+
+    ``app`` is a :data:`TRACE_APPS` name (vectorized :func:`app_trace`),
+    ``"random"`` (uniform injector), or a ``loop:``-prefixed app name for
+    the historical per-node-loop generator :func:`app_trace_loop` — the
+    exact reproducer of trace-dependent protocol pathologies (e.g. the
+    former ``loop:matmul`` 16x16/seed-0/refs-20 S14 wedge gated in CI),
+    reachable end-to-end through manifests and ``--plan``.
+    """
+    if app == "random":
+        return random_trace(cfg, refs_per_core, seed)
+    if app.startswith("loop:"):
+        return app_trace_loop(cfg, app[5:], refs_per_core, seed)
+    return app_trace(cfg, app, refs_per_core, seed)
+
+
 def stacked_traces(cfg: SimConfig, specs, default_refs: int = 200) -> np.ndarray:
     """Stack per-scenario traces into one ``(B, num_nodes, M)`` block for
     the batched sweep engine (:mod:`repro.core.sweep`).
 
     ``specs`` is an iterable of ``(app, seed)`` or ``(app, seed,
-    refs_per_core)`` tuples, where ``app`` is a :data:`TRACE_APPS` name or
-    ``"random"``.  Scenarios with fewer references are right-padded with
+    refs_per_core)`` tuples, where ``app`` is any :func:`resolve_trace`
+    source name.  Scenarios with fewer references are right-padded with
     ``-1`` — the trace-exhaustion sentinel — which is semantically
     identical to running them unpadded, so scenarios of different lengths
     can share one batch.
@@ -257,9 +282,7 @@ def stacked_traces(cfg: SimConfig, specs, default_refs: int = 200) -> np.ndarray
     for sp in specs:
         app, seed = sp[0], sp[1]
         refs = sp[2] if len(sp) > 2 else default_refs
-        t = (random_trace(cfg, refs, seed) if app == "random"
-             else app_trace(cfg, app, refs, seed))
-        mats.append(t)
+        mats.append(resolve_trace(cfg, app, refs, seed))
     if not mats:
         raise ValueError("stacked_traces needs at least one scenario")
     m = max(t.shape[1] for t in mats)

@@ -46,7 +46,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="simulated mesh columns")
     ap.add_argument("--app", default="matmul",
                     help="workload: a TRACE_APPS name (matmul, apsi, mgrid, "
-                         "wupwise, equake) or 'random'")
+                         "wupwise, equake), 'random', or a 'loop:'-prefixed "
+                         "app name for the historical per-node-loop trace "
+                         "generator (exact reproducer of trace-dependent "
+                         "pathologies, e.g. loop:matmul)")
     ap.add_argument("--refs", type=int, default=100,
                     help="memory references per core")
     ap.add_argument("--seed", type=int, default=0,
@@ -55,6 +58,22 @@ def build_parser() -> argparse.ArgumentParser:
                     help="paper-default centralized directory (hot spot!)")
     ap.add_argument("--no-migration", action="store_true",
                     help="disable L2 block migration")
+    ap.add_argument("--pc-depth", type=int, default=None,
+                    help="pending-completion queue depth per node (default: "
+                         "SimConfig.pc_depth).  1 = the paper's single S14 "
+                         "completion register (can livelock under S14 "
+                         "backpressure); >1 enables the ejection guarantee "
+                         "(docs/architecture.md)")
+    ap.add_argument("--eject-age-threshold", type=int, default=None,
+                    help="guaranteed-ejection age threshold (default: "
+                         "SimConfig.eject_age_threshold): with an occupied "
+                         "pending-completion queue, only flits that have "
+                         "deflected at least this many times eject into the "
+                         "spare capacity")
+    ap.add_argument("--pallas-router", action="store_true",
+                    help="run phase-2 arbitration through the Pallas router "
+                         "kernel (interpret mode off-TPU) instead of the "
+                         "XLA reference oracle")
     ap.add_argument("--serial", action="store_true",
                     help="run the golden-model serial simulator instead of "
                          "the planner")
@@ -104,16 +123,21 @@ def main() -> None:
         ap.error(f"--sharded conflicts with --backend {args.backend}")
 
     from repro.core.config import SimConfig
+    kw = {}
+    if args.pc_depth is not None:
+        kw["pc_depth"] = args.pc_depth
+    if args.eject_age_threshold is not None:
+        kw["eject_age_threshold"] = args.eject_age_threshold
     cfg = SimConfig(rows=args.rows, cols=args.cols,
                     centralized_directory=args.centralized,
                     migration_enabled=not args.no_migration,
-                    max_cycles=args.max_cycles)
+                    max_cycles=args.max_cycles,
+                    use_pallas_router=args.pallas_router, **kw)
 
     if args.serial:
         from repro.core.ref_serial import SerialSim
-        from repro.core.trace import app_trace, random_trace
-        tr = (random_trace(cfg, args.refs, args.seed) if args.app == "random"
-              else app_trace(cfg, args.app, args.refs, args.seed))
+        from repro.core.trace import resolve_trace
+        tr = resolve_trace(cfg, args.app, args.refs, args.seed)
         t0 = time.time()
         stats = SerialSim(cfg, tr).run()
         stats["wall_s"] = round(time.time() - t0, 2)

@@ -84,15 +84,22 @@ def test_composed_rejects_centralized_and_short_device_list():
         run_composed(SweepSpec(cfg, (
             ScenarioSpec("matmul", centralized_directory=True),)),
             (1, 1, 1))
+    # ask for one more device than the host exposes, whatever that is
+    # (this suite also runs under XLA_FLAGS-faked multi-device hosts)
+    import jax
+    bs_over = len(jax.devices()) // 4 + 1
     with pytest.raises(ValueError, match="device"):
-        run_composed(SweepSpec(cfg, (ScenarioSpec("matmul"),)), (2, 2, 2))
+        run_composed(SweepSpec(cfg, (ScenarioSpec("matmul"),)),
+                     (bs_over, 2, 2))
 
 
 def test_composed_batched_livelock_abort_with_healthy_batchmate():
     """Per-scenario host monitor: the ROADMAP livelock wedge (16x16 /
     matmul / seed 0 / refs 20, loop-trace) aborts with its diagnostic
     while the healthy scenario sharing the batch finishes bit-identically
-    to its solo run."""
+    to its solo run.  The wedge needs the paper-faithful ``pc_depth=1``
+    escape hatch — the default pending-completion queue resolves it
+    (tests/test_pc_queue.py)."""
     import jax
     import numpy as np
     from repro.core.sharded import ShardedSim
@@ -100,7 +107,7 @@ def test_composed_batched_livelock_abort_with_healthy_batchmate():
     from repro.core.trace import app_trace, app_trace_loop
 
     cfg = SimConfig(rows=16, cols=16, centralized_directory=False,
-                    dir_layout="home", max_cycles=30_000)
+                    dir_layout="home", max_cycles=30_000, pc_depth=1)
     wedge = app_trace_loop(cfg, "matmul", 20, 0)   # the exact ROADMAP combo
     healthy = app_trace(cfg, "equake", 10, 1)
     m = max(wedge.shape[1], healthy.shape[1])

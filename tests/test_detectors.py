@@ -10,6 +10,12 @@ planned bucket uses (solo = batch of one).  The assertions here use the
   circulating forever (S14 backpressure / ejection-bar cycle);
 * saturation — any centralized-directory run at 256 nodes drowns node 0
   (the paper's own observation, the reason it distributes the directory).
+
+Both pathologies require ``pc_depth=1`` (the paper-faithful single S14
+completion register) since the pending-completion queue's ejection
+guarantee resolves them — the detectors now watch those runs *complete*
+at the default depth (see ``tests/test_pc_queue.py``), so the tests here
+pin the compatibility escape hatch to keep a real livelock to detect.
 """
 from repro.core.config import SimConfig
 from repro.core.sim import run
@@ -21,7 +27,7 @@ _DIAG_KEYS = ("circulating_flits", "wait_dir_nodes", "wait_data_nodes",
 
 def test_livelock_detector_aborts_roadmap_freeze():
     cfg = SimConfig(rows=16, cols=16, centralized_directory=False,
-                    livelock_window=256, max_cycles=30_000)
+                    livelock_window=256, max_cycles=30_000, pc_depth=1)
     tr = app_trace_loop(cfg, "matmul", 20, 0)    # the exact ROADMAP combo
     st = run(cfg, tr, chunk=16)
     assert st["aborted"] == "livelock"
@@ -38,7 +44,7 @@ def test_livelock_detector_aborts_roadmap_freeze():
 def test_saturation_detector_aborts_centralized_hotspot():
     cfg = SimConfig(rows=16, cols=16, centralized_directory=True,
                     livelock_window=0,           # isolate the sat monitor
-                    sat_window=1024, max_cycles=30_000)
+                    sat_window=1024, max_cycles=30_000, pc_depth=1)
     tr = app_trace(cfg, "matmul", 20, 1)
     st = run(cfg, tr, chunk=16)
     assert st["aborted"] == "dir_saturation"
@@ -83,7 +89,8 @@ def test_monitors_match_serial_golden_model():
 
 def test_livelock_window_zero_disables():
     cfg = SimConfig(rows=16, cols=16, centralized_directory=False,
-                    livelock_window=0, sat_window=0, max_cycles=4_000)
+                    livelock_window=0, sat_window=0, max_cycles=4_000,
+                    pc_depth=1)
     tr = app_trace_loop(cfg, "matmul", 20, 0)
     st = run(cfg, tr, chunk=16)
     assert "aborted" not in st

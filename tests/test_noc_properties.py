@@ -152,8 +152,8 @@ def test_migration_handler_unit():
     st = st._replace(l2_tag=st.l2_tag.at[1, 7 % 4, 0].set(7))
     mig = 0
     for _ in range(2):   # two REQs from node 2 (threshold=2)
-        pc = jnp.zeros((4, S.NUM_P), jnp.int32)
-        pc = pc.at[1].set(jnp.asarray([1, MSG_REQ, 2, 2, 7], jnp.int32))
+        pc = jnp.zeros((4, cfg.pc_depth, S.NUM_P), jnp.int32)
+        pc = pc.at[1, 0].set(jnp.asarray([1, MSG_REQ, 2, 2, 7], jnp.int32))
         st = st._replace(pc=pc)
         st = phase1a(st, cfg, ctx)
     stats = {k: int(v) for k, v in zip(
