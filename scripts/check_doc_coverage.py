@@ -31,6 +31,8 @@ MODULES = [
     "repro.core.sharded",
     "repro.core.sim",
     "repro.core.config",
+    "repro.core.workloads",
+    "repro.core.zoo",
 ]
 
 #: (module, symbol): every signature parameter must appear in the
@@ -45,6 +47,9 @@ NAMED_SURFACE = [
     ("repro.core.sweep", "run_sweep"),
     ("repro.core.sharded", "ShardedSim"),
     ("repro.core.sharded", "run_composed"),
+    ("repro.core.workloads", "resolve_trace"),
+    ("repro.core.workloads", "pattern_trace"),
+    ("repro.core.zoo", "ZooFamily"),
 ]
 
 MIN_DOC = 40   # characters; filters out placeholder one-worders

@@ -27,7 +27,7 @@ PROLOG = """\
 > **Generated file — do not edit.**  Regenerate with
 > `PYTHONPATH=src python scripts/gen_cli_docs.py` (CI fails on drift).
 
-The launcher is one entry point with four modes.  All but `--serial`
+The launcher is one entry point with five modes.  All but `--serial`
 route through the execution-plan layer (`repro.core.engine`): scenarios
 are bucketed by structural config, each bucket compiles once, and a cost
 model picks the `sweep` / `sharded` / `composed` backend per bucket
@@ -49,22 +49,44 @@ PYTHONPATH=src python -m repro.launch.simulate --rows 16 --cols 16 \\
 
 # heterogeneous plan from a manifest
 PYTHONPATH=src python -m repro.launch.simulate --plan manifest.json
+
+# a registered scenario-zoo family (repro.core.zoo; `--zoo list` enumerates)
+PYTHONPATH=src python -m repro.launch.simulate --zoo patterns-small
 ```
 
 `--backend {auto,sweep,sharded,composed}` pins the planner's backend in
 any planner mode; a structurally impossible pin degrades to `sweep` with
 an explanatory `note` in the output instead of failing.
 
+## Workload sources
+
+`--app` (and the APP field of manifests, `--apps`, zoo families) is a
+**traffic-generator registry** spec — `name` or `name:key=val,...`
+(`repro.core.workloads`; bare values fill the generator's positional
+slots, so `loop:matmul` == `loop:app=matmul`).  Patterns realize their
+destination pattern through distributed-directory homes — pair them
+with a distributed directory (the zoo families do).  The registry
+(generated — new generators appear here automatically):
+
+```text
+%SOURCE_HELP%
+```
+
 ## `--plan` manifests
 
 `--plan` accepts three spellings of the same thing.
 
-**1. Compact grammar** — `ROWSxCOLS:APP:SEED[:REFS]` items joined with
-`;` or `,` (APP defaults to `matmul`, SEED to `0`, REFS to `200`):
+**1. Compact grammar** — `ROWSxCOLS[:APP][:SEED[:REFS]]` items joined
+with `;` or `,` (APP defaults to `matmul`, SEED to `0`, REFS to `200`).
+APP may be any source spec, including parameterized ones — up to two
+trailing *integer* fields parse as SEED/REFS, so spell source parameters
+`key=val`:
 
 ```sh
 PYTHONPATH=src python -m repro.launch.simulate \\
     --plan '8x8:matmul:0:50;8x8:equake:1:50;16x16:equake:0:50'
+PYTHONPATH=src python -m repro.launch.simulate \\
+    --plan '8x8:hotspot:frac=0.8,hot=2:0:50;8x8:transpose:rate=0.5'
 ```
 
 **2. Inline JSON** — an object with an optional `base` (any `SimConfig`
@@ -118,7 +140,8 @@ def flag_table() -> str:
 
 
 def render() -> str:
-    return PROLOG + flag_table()
+    from repro.core.workloads import source_help
+    return PROLOG.replace("%SOURCE_HELP%", source_help()) + flag_table()
 
 
 def main() -> int:

@@ -122,7 +122,12 @@ class SimConfig:
     # times are ejected into the spare capacity; younger flits still see
     # the paper-faithful ejection bar.  0 = always eject while a slot is
     # free.  (Traced per-scenario knob — rides as SimState.knob_ej_age.)
-    eject_age_threshold: int = 8
+    # Default 0 measured by benchmarks/zoo_tune.py across the pattern/
+    # hotspot/rates/wedge zoo (benchmarks/zoo_thresholds.json): every
+    # (age, timeout) grid point completes every scenario, and the
+    # ungated setting is uniformly fastest (1.3% mean cycles over the
+    # previous age-8 default, 10x fewer recovered drops).
+    eject_age_threshold: int = 0
     # Transaction timeout (pc_depth > 1 only): a node stuck in
     # WAIT_DIR/WAIT_DATA for this many cycles restarts its transaction
     # with a fresh DA to the tag's directory home.  This is the

@@ -44,8 +44,9 @@ and point ``REPRO_COST_MODEL`` (or :func:`load_cost_constants`) at the
 emitted file.
 
 Manifests: :func:`load_manifest` accepts a JSON object/list (or a path to
-one), or the compact CLI grammar ``ROWSxCOLS:APP:SEED[:REFS]`` joined with
-``;`` or ``,``::
+one), or the compact CLI grammar ``ROWSxCOLS[:APP][:SEED[:REFS]]`` joined
+with ``;`` or ``,`` — APP is any workload-registry source spec
+(``matmul``, ``loop:matmul``, ``hotspot:frac=0.8,hot=2``, ...)::
 
     {"base": {"addr_bits": 16, "centralized_directory": false},
      "scenarios": [
@@ -62,12 +63,13 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import re
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from .config import CacheConfig, SimConfig
-from .trace import TRACE_APPS
+from .workloads import source_summary, valid_source
 
 __all__ = [
     "Scenario", "Bucket", "ExecutionPlan", "make_scenario", "bucket_key",
@@ -98,7 +100,7 @@ def expose_host_devices() -> None:
 KNOB_FIELDS = ("migration_enabled", "migrate_threshold",
                "centralized_directory", "eject_age_threshold")
 _KNOB_NORM = dict(migration_enabled=True, migrate_threshold=3,
-                  centralized_directory=False, eject_age_threshold=8)
+                  centralized_directory=False, eject_age_threshold=0)
 
 @dataclasses.dataclass(frozen=True)
 class CostConstants:
@@ -190,31 +192,35 @@ class Scenario:
             policy knobs — the planner decides what is structural (splits
             compile buckets) and what is traced (rides as
             ``SimState.knob_*`` state).
-        app: workload name — a :data:`repro.core.trace.TRACE_APPS` key
-            (``matmul``/``apsi``/``mgrid``/``wupwise``/``equake``),
-            ``"random"`` for the uniform synthetic injector, or a
-            ``loop:``-prefixed app name for the historical per-node-loop
-            generator (exact reproducer of trace-dependent pathologies —
-            see :func:`repro.core.trace.resolve_trace`).
+        app: workload source spec, dispatched through the traffic-
+            generator registry (:mod:`repro.core.workloads`): an app
+            model (``matmul``/``apsi``/``mgrid``/``wupwise``/``equake``),
+            ``random``, ``loop:<app>`` (the historical per-node-loop
+            reference generator), or a synthetic NoC pattern with
+            optional parameters (``transpose``, ``bitcomp``,
+            ``hotspot:frac=0.8,hot=2``, ``tornado``, ``neighbor:rate=0.5``).
         seed: trace-synthesis seed.
         refs_per_core: memory references each core issues; the synthesized
             trace is ``(cfg.num_nodes, refs_per_core)`` int32 addresses.
     """
 
     cfg: SimConfig
-    app: str = "matmul"            # trace source (trace.resolve_trace)
+    app: str = "matmul"            # trace source (workloads registry spec)
     seed: int = 0
     refs_per_core: int = 200
 
     def validate(self) -> None:
         """Raise ``ValueError``/``AssertionError`` on an invalid config,
         unknown app name, or non-positive refs_per_core."""
-        from .trace import valid_app
         self.cfg.validate()
-        if not valid_app(self.app):
-            raise ValueError(f"unknown app {self.app!r}; choose from "
-                             f"{sorted(TRACE_APPS)}, 'random', or a "
-                             "'loop:'-prefixed app name")
+        if not valid_source(self.app):
+            # re-parse to surface the specific parse error (unknown
+            # generator vs bad parameter) with the registry roll-call
+            from .workloads import parse_source
+            try:
+                parse_source(self.app)
+            except ValueError as e:
+                raise ValueError(f"bad scenario app: {e}") from None
         if self.refs_per_core < 1:
             raise ValueError("refs_per_core must be >= 1")
 
@@ -533,7 +539,7 @@ def _run_bucket_sharded(b: Bucket, max_cycles: Optional[int],
     import jax
     from jax.sharding import Mesh
     from .sharded import ShardedSim
-    from .trace import resolve_trace
+    from .workloads import resolve_trace
     (sc,) = b.scenarios
     cfg = dataclasses.replace(sc.cfg, dir_layout="home")
     tr = resolve_trace(cfg, sc.app, sc.refs_per_core, sc.seed)
@@ -619,28 +625,59 @@ def _scenario_from_entry(entry: Dict, base: SimConfig) -> Scenario:
     return Scenario(cfg=cfg, app=app, seed=seed, refs_per_core=refs)
 
 
+_MESH_RE = re.compile(r"^\d+x\d+(?::|$)", re.IGNORECASE)
+
+
+def _split_compact(text: str) -> List[str]:
+    """Split a compact manifest into scenario items.  ``;`` always
+    separates scenarios; ``,`` separates too, EXCEPT inside a source
+    spec's parameter list (``hotspot:frac=0.8,hot=2``) — a comma
+    fragment that does not start with ``ROWSxCOLS`` continues the
+    previous item."""
+    items: List[str] = []
+    for semi in text.split(";"):
+        open_item = False      # a ';' hard-closes the current item
+        for frag in semi.split(","):
+            frag = frag.strip()
+            if not frag:
+                continue
+            if open_item and not _MESH_RE.match(frag):
+                items[-1] += "," + frag
+            else:
+                items.append(frag)
+                open_item = True
+    return items
+
+
 def _parse_compact(text: str, base: SimConfig) -> List[Scenario]:
-    """``ROWSxCOLS:APP:SEED[:REFS]`` items joined with ``;`` or ``,``."""
+    """``ROWSxCOLS[:APP][:SEED[:REFS]]`` items joined with ``;`` or ``,``.
+
+    APP is any registry source spec and may itself contain ``:`` and
+    ``,`` (``loop:matmul``, ``hotspot:frac=0.8,hot=2``): the mesh is
+    parsed from the front, up to two trailing *integer* fields parse as
+    SEED and REFS, and everything between is the source spec.  Spell
+    source parameters ``key=val`` so they are never mistaken for
+    SEED/REFS."""
     out = []
-    for item in text.replace(";", ",").split(","):
-        item = item.strip()
-        if not item:
-            continue
+    for item in _split_compact(text):
         parts = item.split(":")
         try:
             rows, cols = (int(x) for x in parts[0].lower().split("x"))
         except ValueError:
             raise ValueError(
                 f"bad compact scenario {item!r}; expected "
-                "ROWSxCOLS:APP:SEED[:REFS] (or a path to an existing "
+                "ROWSxCOLS[:APP][:SEED[:REFS]] (or a path to an existing "
                 "JSON manifest)") from None
-        if len(parts) > 4:
-            raise ValueError(f"compact scenario {item!r} has "
-                             f"{len(parts) - 1} fields; only "
-                             "APP:SEED:REFS follow ROWSxCOLS")
-        app = parts[1] if len(parts) > 1 else "matmul"
-        seed = int(parts[2]) if len(parts) > 2 else 0
-        refs = int(parts[3]) if len(parts) > 3 else 200
+        mid = parts[1:]
+        tail: List[int] = []
+        while mid and len(tail) < 2 and re.fullmatch(r"-?\d+", mid[-1]):
+            tail.insert(0, int(mid.pop()))
+        app = ":".join(mid) if mid else "matmul"
+        seed = tail[0] if tail else 0
+        refs = tail[1] if len(tail) > 1 else 200
+        if not valid_source(app):
+            raise ValueError(f"compact scenario {item!r}: bad source "
+                             f"{app!r}; {source_summary()}")
         out.append(make_scenario(base, rows, cols, app, seed, refs))
     if not out:
         raise ValueError("empty compact scenario list")

@@ -12,8 +12,9 @@ freeze early finishers bit-identically to a solo :func:`repro.core.sim.run`
 would have), so mixed-length scenarios coexist in one batch.
 
 What may vary per scenario:
-  * the workload — app / seed / refs-per-core (stacked, ``-1``-padded
-    traces, see :func:`repro.core.trace.stacked_traces`);
+  * the workload — source spec / seed / refs-per-core (stacked,
+    ``-1``-padded traces, see
+    :func:`repro.core.workloads.stacked_traces`);
   * traced policy knobs carried in state (``SimState.knob_*``):
     migration on/off, migration threshold, centralized vs distributed
     directory.
@@ -38,7 +39,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 from .config import SimConfig
 from .sim import _run_jit, run, stats_list
 from .state import SimState, init_state
-from .trace import stacked_traces
+from .workloads import stacked_traces
 
 __all__ = ["ScenarioSpec", "SweepSpec", "run_sweep", "run_sequential",
            "scenario_device_count"]
@@ -50,7 +51,7 @@ class ScenarioSpec:
 
     ``None`` knobs inherit the sweep-wide :class:`SimConfig` value."""
 
-    app: str = "matmul"            # trace source (see trace.resolve_trace)
+    app: str = "matmul"        # source spec (see workloads.resolve_trace)
     seed: int = 0
     refs_per_core: int = 200
     migration_enabled: Optional[bool] = None

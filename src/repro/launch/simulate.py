@@ -16,19 +16,28 @@ explanatory note when structurally impossible on this host):
     ... --backend sharded
     ... --sweep --apps matmul --seeds 0,1,2,3 --backend composed
 Heterogeneous plan — mixed mesh shapes/apps/knobs from a manifest (a JSON
-file, inline JSON, or the compact ROWSxCOLS:APP:SEED[:REFS] grammar):
+file, inline JSON, or the compact ROWSxCOLS[:APP][:SEED[:REFS]] grammar;
+APP is any workload-registry source spec):
     ... --plan manifest.json
     ... --plan '8x8:matmul:0:50;16x16:equake:1:50'
+    ... --plan '8x8:hotspot:frac=0.8,hot=2:0:50'
+Scenario zoo — run a registered family (repro.core.zoo) end to end:
+    ... --zoo patterns-small
+    ... --zoo patterns-tiny:refs=8,seeds=0
+    ... --zoo list
 
 ``docs/cli.md`` is generated from this parser by
 ``scripts/gen_cli_docs.py`` (CI fails on drift) — keep flag help strings
-self-contained.
+self-contained.  The ``--app`` help and error text are generated from
+the traffic-generator registry, so new generators appear automatically.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import time
+
+from repro.core.workloads import source_summary
 
 BACKENDS = ("auto", "sweep", "sharded", "composed")
 
@@ -45,11 +54,9 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--cols", type=int, default=16,
                     help="simulated mesh columns")
     ap.add_argument("--app", default="matmul",
-                    help="workload: a TRACE_APPS name (matmul, apsi, mgrid, "
-                         "wupwise, equake), 'random', or a 'loop:'-prefixed "
-                         "app name for the historical per-node-loop trace "
-                         "generator (exact reproducer of trace-dependent "
-                         "pathologies, e.g. loop:matmul)")
+                    help="workload source spec, dispatched through the "
+                         "traffic-generator registry (repro.core.workloads); "
+                         + source_summary())
     ap.add_argument("--refs", type=int, default=100,
                     help="memory references per core")
     ap.add_argument("--seed", type=int, default=0,
@@ -93,8 +100,15 @@ def build_parser() -> argparse.ArgumentParser:
                          "sweep; combine with --backend to override)")
     ap.add_argument("--plan", default=None, metavar="MANIFEST",
                     help="scenario manifest: JSON file path, inline JSON, or "
-                         "compact 'ROWSxCOLS:APP:SEED[:REFS];...' items; "
-                         "mixed mesh shapes allowed (repro.core.engine)")
+                         "compact 'ROWSxCOLS[:APP][:SEED[:REFS]];...' items "
+                         "(APP = any registry source spec); mixed mesh "
+                         "shapes allowed (repro.core.engine)")
+    ap.add_argument("--zoo", default=None, metavar="FAMILY",
+                    help="run a registered scenario-zoo family "
+                         "(repro.core.zoo) through the planner: 'FAMILY' or "
+                         "'FAMILY:refs=N,seeds=0+1,meshes=4x4+8x8'; "
+                         "'--zoo list' prints the registered families and "
+                         "exits")
     ap.add_argument("--apps", default=None,
                     help="comma list of apps for --sweep (default: --app)")
     ap.add_argument("--seeds", default=None,
@@ -112,9 +126,14 @@ def main() -> None:
     ap = build_parser()
     args = ap.parse_args()
 
-    modes = [m for m in ("serial", "sweep", "plan") if getattr(args, m)]
+    if args.zoo == "list":
+        from repro.core.zoo import zoo_summary
+        print(zoo_summary())
+        return
+
+    modes = [m for m in ("serial", "sweep", "plan", "zoo") if getattr(args, m)]
     if len(modes) > 1:
-        ap.error(f"choose at most one of --serial/--sweep/--plan "
+        ap.error(f"choose at most one of --serial/--sweep/--plan/--zoo "
                  f"(got {modes})")
     if args.serial and (args.sharded or args.backend != "auto"):
         ap.error("--serial does not route through the planner; "
@@ -149,13 +168,16 @@ def main() -> None:
         return
 
     from repro.core import engine
-    if args.sweep or args.plan:
+    if args.sweep or args.plan or args.zoo:
         engine.expose_host_devices()
 
     force = args.backend if args.backend != "auto" else None
     if args.sharded:
         force = "sharded"
-    if args.plan:
+    if args.zoo:
+        from repro.core.zoo import expand_zoo
+        scenarios = expand_zoo(args.zoo, base=cfg)
+    elif args.plan:
         scenarios = engine.load_manifest(args.plan, base=cfg)
     elif args.sweep:
         apps = (args.apps or args.app).split(",")
@@ -173,10 +195,10 @@ def main() -> None:
     per_scenario = engine.execute_plan(plan, chunk=args.chunk)
     dt = time.time() - t0
 
-    # payload schema follows the *mode*, not the scenario count: --sweep
-    # and --plan always emit the {plan, scenarios, ...} form, even for a
-    # single scenario
-    if not (args.sweep or args.plan):
+    # payload schema follows the *mode*, not the scenario count: --sweep,
+    # --plan and --zoo always emit the {plan, scenarios, ...} form, even
+    # for a single scenario
+    if not (args.sweep or args.plan or args.zoo):
         payload = dict(per_scenario[0])
         payload["wall_s"] = round(dt, 2)
         payload["nodes"] = scenarios[0].cfg.num_nodes
@@ -185,6 +207,7 @@ def main() -> None:
             payload["backend_note"] = plan.buckets[0].note
     else:
         payload = {
+            **({"zoo": args.zoo} if args.zoo else {}),
             "plan": plan.describe(),
             "scenarios": [
                 {"rows": sc.cfg.rows, "cols": sc.cfg.cols, "app": sc.app,

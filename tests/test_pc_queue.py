@@ -81,8 +81,12 @@ def test_healthy_run_identical_across_depths():
 # ---------------------------------------------------------------------------
 
 def _idle_serial(depth: int, rob_slots: int = 4) -> SerialSim:
+    # eject_age_threshold pinned explicitly: these unit tests exercise
+    # the age-gating mechanics, which must not depend on the tuned
+    # default (0 since the zoo_tune sweep — benchmarks/zoo_thresholds.json)
     cfg = SimConfig(rows=2, cols=2, addr_bits=14, pc_depth=depth,
-                    rob_slots=rob_slots, centralized_directory=False)
+                    rob_slots=rob_slots, centralized_directory=False,
+                    eject_age_threshold=8)
     return SerialSim(cfg, np.full((4, 1), -1, np.int64))
 
 

@@ -1,0 +1,138 @@
+"""Scenario-zoo registry (repro.core.zoo) + the tuning harness contract.
+
+Fast checks (expansion is pure python) plus one subprocess smoke of
+``benchmarks/zoo_tune.py --smoke`` — the same invocation the CI
+``zoo-smoke`` job runs, asserting the recommendation JSON is
+well-formed."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import zoo
+from repro.core.config import SimConfig
+from repro.core.workloads import PATTERN_NAMES, valid_source
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_families_registered_and_sized():
+    names = zoo.family_names()
+    for required in ("patterns-tiny", "patterns-small", "patterns-rates",
+                     "hotspot-stress", "apps-small", "wedge"):
+        assert required in names, names
+    f = zoo.get_family("patterns-small")
+    assert f.size == 2 * len(PATTERN_NAMES) * 2 == len(f.expand())
+    assert zoo.get_family("wedge").sources == ("loop:matmul",)
+    assert len(zoo.zoo_summary().splitlines()) == len(names)
+
+
+def test_every_family_source_parses():
+    """Registration already guards this; the test pins it for families
+    added later, and checks pattern families force the distributed
+    directory (patterns need tag-home destinations)."""
+    for name in zoo.family_names():
+        f = zoo.get_family(name)
+        for s in f.sources:
+            assert valid_source(s), (name, s)
+        if any(src.split(":")[0] in PATTERN_NAMES for src in f.sources):
+            assert f.base.get("centralized_directory") is False, name
+
+
+def test_expansion_is_plan_ready():
+    scs = zoo.get_family("patterns-tiny").expand()
+    assert len(scs) == 10
+    for sc in scs:
+        sc.validate()
+        assert sc.cfg.rows == sc.cfg.cols == 4
+        assert not sc.cfg.centralized_directory
+    # cross-product order: mesh-major, then source, then seed
+    assert [sc.seed for sc in scs[:2]] == [0, 1]
+    assert scs[0].app == scs[1].app
+
+
+def test_manifest_round_trips_through_load_manifest():
+    from repro.core import engine
+    fam = zoo.get_family("patterns-tiny")
+    via_manifest = engine.load_manifest(fam.manifest())
+    direct = fam.expand()
+    assert [(s.cfg, s.app, s.seed, s.refs_per_core) for s in via_manifest] \
+        == [(s.cfg, s.app, s.seed, s.refs_per_core) for s in direct]
+
+
+def test_zoo_spec_overrides():
+    scs = zoo.expand_zoo("patterns-small:refs=7,seeds=3+4,meshes=4x4")
+    assert len(scs) == len(PATTERN_NAMES) * 2
+    assert {sc.refs_per_core for sc in scs} == {7}
+    assert {sc.seed for sc in scs} == {3, 4}
+    assert {(sc.cfg.rows, sc.cfg.cols) for sc in scs} == {(4, 4)}
+    scs = zoo.expand_zoo("wedge:sources=loop:matmul+random")
+    assert [sc.app for sc in scs] == ["loop:matmul", "random"]
+    with pytest.raises(ValueError, match="unknown zoo family"):
+        zoo.expand_zoo("nope")
+    with pytest.raises(ValueError, match="key=val"):
+        zoo.expand_zoo("wedge:refs")
+    with pytest.raises(ValueError, match="invalid source"):
+        zoo.expand_zoo("wedge:sources=bogus")
+
+
+def test_expand_respects_base_config():
+    base = SimConfig(addr_bits=14, rob_slots=4)
+    scs = zoo.expand_zoo("patterns-tiny", base=base)
+    for sc in scs:
+        assert sc.cfg.addr_bits == 14 and sc.cfg.rob_slots == 4
+        assert not sc.cfg.centralized_directory   # family override wins
+
+
+def test_zoo_tune_recommend_is_honest_about_unswept_defaults():
+    """recommend() must not claim the defaults failed (or flip them)
+    when they simply were not part of the swept grid."""
+    sys.path.insert(0, os.path.join(REPO_ROOT, "benchmarks"))
+    try:
+        import zoo_tune
+    finally:
+        sys.path.pop(0)
+    row = lambda t, a, norm, unfin=0: {
+        "req_timeout": t, "eject_age_threshold": a, "finished": 5 - unfin,
+        "unfinished": unfin, "aborted": 0, "unfinished_scenarios": [],
+        "mean_norm_cycles": norm, "total_drops": 0}
+    d = zoo_tune.DEFAULTS
+    # defaults not in the grid: best reported, flip refused
+    rec, flip, why = zoo_tune.recommend(
+        [row(64, 2, 1.0), row(64, 4, 1.1)], 0.01)
+    assert rec["req_timeout"] == 64 and not flip
+    assert "not in the swept grid" in why
+    # defaults swept and within margin: kept
+    rec, flip, why = zoo_tune.recommend(
+        [row(d["req_timeout"], d["eject_age_threshold"], 1.005),
+         row(64, 2, 1.0)], 0.01)
+    assert not flip and rec["req_timeout"] == d["req_timeout"]
+    # defaults swept and beaten beyond margin: flipped
+    rec, flip, why = zoo_tune.recommend(
+        [row(d["req_timeout"], d["eject_age_threshold"], 1.1),
+         row(64, 2, 1.0)], 0.01)
+    assert flip and rec["req_timeout"] == 64
+    # defaults swept but unsafe: flipped with the unfinished rationale
+    rec, flip, why = zoo_tune.recommend(
+        [row(d["req_timeout"], d["eject_age_threshold"], None, unfin=2),
+         row(64, 2, 1.0)], 0.01)
+    assert flip and "unfinished" in why
+
+
+def test_zoo_tune_smoke_emits_wellformed_recommendation():
+    """The CI zoo-smoke contract: --smoke self-checks and the stdout
+    payload parses with table + recommendation + flip_defaults."""
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    out = subprocess.run(
+        [sys.executable, "benchmarks/zoo_tune.py", "--smoke"],
+        cwd=REPO_ROOT, capture_output=True, text=True, timeout=900,
+        env=env)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SMOKE OK" in out.stderr
+    payload = json.loads(out.stdout[out.stdout.index("{"):])
+    assert payload["table"] and payload["recommendation"] is not None
+    assert set(payload["defaults"]) == {"eject_age_threshold",
+                                        "req_timeout"}
+    assert isinstance(payload["flip_defaults"], bool)
