@@ -1,32 +1,32 @@
-"""Execution-plan benchmarks: vectorized trace synthesis + planned sweeps.
+"""Execution-plan benchmarks: planned sweeps, backend shoot-out, wedge.
 
-    PYTHONPATH=src python benchmarks/plan_throughput.py
+    PYTHONPATH=src python benchmarks/plan_throughput.py [--smoke] [--out f]
 
-Part 1 — trace synthesis at scale (the ROADMAP ">100k-core trace synthesis
-dominates sweep setup" item): times the vectorized ``app_trace`` at the
-target mesh (default 256x256 = 65,536 cores) against the historical
-per-node-loop generator ``app_trace_loop`` (timed at a smaller mesh and
-extrapolated linearly — the loop *is* linear in nodes — unless
-``--full-loop`` is given), and reports trace synthesis as a fraction of
-end-to-end setup (synthesis + state init).
-
-Part 2 — planned mixed-shape sweep: a manifest mixing two mesh shapes runs
+Part 1 — planned mixed-shape sweep: a manifest mixing two mesh shapes runs
 through ``compile_plan``/``execute_plan`` (one compiled program per shape
 bucket) vs the same scenarios as sequential solo ``run()`` calls, with a
 bit-exactness cross-check, so no speedup is ever bought with wrong numbers.
 
-Part 3 — backend shoot-out: ONE bucket (B scenarios of one mesh shape)
+Part 2 — backend shoot-out: ONE bucket (B scenarios of one mesh shape)
 forced through each backend — vmapped ``sweep``, spatial ``sharded``
 (B sequential spatial runs), composed ``scenario x row x col`` — on this
 host's devices, with wall-clock per backend, the planner's own pick, and
 a cross-backend bit-equality check.  Backends that are structurally
 impossible here (one device, indivisible mesh) degrade to ``sweep`` and
 are reported with the planner's note.
+
+Part 3 — the former S14 ejection-bar wedge (16x16 / loop:matmul / seed 0
+/ refs 20) as a tracked scenario: its completion cycles/time and drop
+counts are gated so the livelock fix can never silently rot.
+
+Emits ``BENCH_plan.json``: gated metrics are the deterministic counters
+(bucket/compile counts, wedge completion cycles, drops) plus the
+plan-vs-sequential speedup ratio; raw walls and per-backend
+scenarios/sec ride along ungated.  (Trace synthesis moved to
+``benchmarks/trace_throughput.py`` / ``BENCH_trace.json``.)
 """
 from __future__ import annotations
 
-import argparse
-import json
 import sys
 import time
 
@@ -36,46 +36,11 @@ from repro.core import engine                              # noqa: E402
 
 engine.expose_host_devices()   # before anything imports jax
 
-from repro.core.config import SimConfig                    # noqa: E402
-from repro.core.sim import run                             # noqa: E402
-from repro.core.state import init_state                    # noqa: E402
-from repro.core.trace import (                             # noqa: E402
-    app_trace, app_trace_loop, resolve_trace)
-
-
-def bench_trace(args) -> dict:
-    cfg = SimConfig(rows=args.trace_rows, cols=args.trace_cols,
-                    centralized_directory=False)
-    t0 = time.time()
-    tr = app_trace(cfg, args.trace_app, args.trace_refs, seed=0)
-    vec_s = time.time() - t0
-
-    t0 = time.time()
-    s = init_state(cfg, tr)
-    s.st.block_until_ready()
-    init_s = time.time() - t0
-
-    if args.full_loop:
-        loop_cfg, scale = cfg, 1.0
-    else:
-        loop_cfg = SimConfig(rows=args.loop_rows, cols=args.loop_cols,
-                             centralized_directory=False)
-        scale = cfg.num_nodes / loop_cfg.num_nodes
-    t0 = time.time()
-    app_trace_loop(loop_cfg, args.trace_app, args.trace_refs, seed=0)
-    loop_s = (time.time() - t0) * scale
-
-    return {
-        "nodes": cfg.num_nodes,
-        "refs_per_core": args.trace_refs,
-        "vectorized_synth_s": round(vec_s, 3),
-        "loop_synth_s" + ("" if args.full_loop else "_extrapolated"):
-            round(loop_s, 3),
-        "synth_speedup": round(loop_s / vec_s, 1),
-        "state_init_s": round(init_s, 3),
-        "trace_fraction_of_setup": round(vec_s / (vec_s + init_s), 3),
-        "loop_trace_fraction_of_setup": round(loop_s / (loop_s + init_s), 3),
-    }
+from repro.bench import BenchReport, Benchmark, bench_main  # noqa: E402
+from repro.bench.collect import (                           # noqa: E402
+    count_metric, flag_metric, health_metrics, ratio_metric, timing_metric)
+from repro.core import SimConfig, run                       # noqa: E402
+from repro.core.trace import app_trace_loop, resolve_trace  # noqa: E402
 
 
 def bench_plan(args) -> dict:
@@ -108,6 +73,7 @@ def bench_plan(args) -> dict:
         "planned_s": round(plan_s, 2),
         "speedup": round(seq_s / plan_s, 2),
         "all_finished": all(r.get("finished") for r in got),
+        "scenario_stats": got,
     }
 
 
@@ -166,7 +132,7 @@ def bench_wedge(args) -> dict:
     The pc_depth=1 escape hatch is timed next to it for the abort
     baseline."""
     cfg = SimConfig(rows=16, cols=16, centralized_directory=False,
-                    max_cycles=args.max_cycles)
+                    max_cycles=max(args.max_cycles, 200_000))
     sc = engine.make_scenario(cfg, app="loop:matmul", seed=0,
                               refs_per_core=20)
     plan = engine.compile_plan([sc])
@@ -176,7 +142,8 @@ def bench_wedge(args) -> dict:
     wall = time.time() - t0
 
     import dataclasses
-    cfg1 = dataclasses.replace(cfg, pc_depth=1, livelock_window=256)
+    cfg1 = dataclasses.replace(cfg, pc_depth=1, livelock_window=256,
+                               max_cycles=30_000)
     tr = app_trace_loop(cfg1, "matmul", 20, 0)
     run(cfg1, tr, chunk=16)                      # warm
     t0 = time.time()
@@ -190,6 +157,7 @@ def bench_wedge(args) -> dict:
         "completion_wall_s": round(wall, 2),
         "send_drops_recovered": st.get("send_drop"),
         "stray_responses": st.get("stray"),
+        "stats": st,
         "pc_depth_1_baseline": {
             "aborted": st1.get("aborted"),
             "abort_cycles": st1.get("cycles"),
@@ -198,17 +166,7 @@ def bench_wedge(args) -> dict:
     }
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--trace-rows", type=int, default=256)
-    ap.add_argument("--trace-cols", type=int, default=256)
-    ap.add_argument("--trace-refs", type=int, default=200)
-    ap.add_argument("--trace-app", default="matmul")
-    ap.add_argument("--loop-rows", type=int, default=64)
-    ap.add_argument("--loop-cols", type=int, default=64)
-    ap.add_argument("--full-loop", action="store_true",
-                    help="time the loop generator at the full target mesh "
-                         "instead of extrapolating from --loop-rows/cols")
+def add_args(ap) -> None:
     ap.add_argument("--skip-plan", action="store_true")
     ap.add_argument("--skip-backends", action="store_true")
     ap.add_argument("--skip-wedge", action="store_true")
@@ -227,27 +185,93 @@ def main() -> None:
     ap.add_argument("--refs", type=int, default=25)
     ap.add_argument("--chunk", type=int, default=8)
     ap.add_argument("--max-cycles", type=int, default=20_000)
-    ap.add_argument("--json", default=None)
-    args = ap.parse_args()
 
-    payload = {"trace_synthesis": bench_trace(args)}
+
+def run_bench(args) -> BenchReport:
+    """Contract entry: run the three parts, emit ``BENCH_plan.json``
+    metrics, and hard-fail on any cross-check divergence."""
+    rep = BenchReport("plan", meta={"params": {
+        "shapes": [f"{args.rows_a}x{args.cols_a}",
+                   f"{args.rows_b}x{args.cols_b}"],
+        "seeds_per_shape": args.seeds_per_shape, "app": args.app,
+        "refs": args.refs, "bk_batch": args.bk_batch,
+        "bk_mesh": f"{args.bk_rows}x{args.bk_cols}"}})
+
     if not args.skip_plan:
-        payload["planned_sweep"] = bench_plan(args)
+        p = bench_plan(args)
+        stats = p.pop("scenario_stats")
+        rep.raw["planned_sweep"] = p
+        tags = {"app": args.app}
+        rep.extend([
+            count_metric("plan.n_scenarios", p["n_scenarios"],
+                         direction="higher", tags=tags),
+            count_metric("plan.n_buckets", p["plan"]["n_buckets"],
+                         unit="compiles", tags=tags),
+            flag_metric("plan.bit_identical", p["bit_identical"]),
+            flag_metric("plan.all_finished", p["all_finished"]),
+            timing_metric("plan.sequential_s", p["sequential_s"]),
+            timing_metric("plan.planned_s", p["planned_s"]),
+            ratio_metric("plan.speedup", p["speedup"], tags=tags),
+        ])
+        rep.extend(health_metrics(stats, "plan.net", tags=tags))
+
     if not args.skip_backends:
-        payload["backend_shootout"] = bench_backends(args)
+        b = bench_backends(args)
+        rep.raw["backend_shootout"] = b
+        tags = {"mesh": f"{args.bk_rows}x{args.bk_cols}",
+                "batch": str(args.bk_batch)}
+        for backend in ("sweep", "sharded", "composed"):
+            rep.add(f"plan.backend.{backend}.scenarios_per_sec",
+                    b[backend]["scenarios_per_sec"], unit="scen/s",
+                    direction="higher", gate=False,
+                    tags={**tags,
+                          "effective": b[backend]["effective_backend"]})
+        rep.extend([
+            flag_metric("plan.backend.bit_identical",
+                        b["bit_identical_across_backends"]),
+            count_metric("plan.backend.devices", b["devices"],
+                         unit="devices", direction="higher", gate=False),
+        ])
+
     if not args.skip_wedge:
-        payload["livelock_wedge"] = bench_wedge(args)
-    print(json.dumps(payload, indent=1))
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump(payload, f)
-    if not args.skip_plan and payload["planned_sweep"]["mismatched_scenarios"]:
+        w = bench_wedge(args)
+        wstats = w.pop("stats")
+        rep.raw["livelock_wedge"] = w
+        tags = {"scenario": "16x16/loop:matmul/0/20"}
+        rep.extend([
+            flag_metric("plan.wedge.finished", w["finished"], tags=tags),
+            count_metric("plan.wedge.completion_cycles",
+                         w["completion_cycles"], unit="cycles", tags=tags),
+            timing_metric("plan.wedge.completion_wall_s",
+                          w["completion_wall_s"], tags=tags),
+        ])
+        rep.extend(health_metrics([wstats], "plan.wedge.net", tags=tags))
+
+    if not args.skip_plan and \
+            rep.raw["planned_sweep"]["mismatched_scenarios"]:
         raise SystemExit("planned sweep diverged from sequential runs")
     if not args.skip_backends and \
-            not payload["backend_shootout"]["bit_identical_across_backends"]:
+            not rep.raw["backend_shootout"]["bit_identical_across_backends"]:
         raise SystemExit("backends diverged on the same scenarios")
-    if not args.skip_wedge and not payload["livelock_wedge"]["finished"]:
+    if not args.skip_wedge and not rep.raw["livelock_wedge"]["finished"]:
         raise SystemExit("former wedge scenario no longer completes")
+    return rep
+
+
+BENCH = Benchmark(
+    area="plan",
+    title="Execution-plan layer: mixed-shape sweep, backend shoot-out, "
+          "wedge completion",
+    add_args=add_args,
+    run=run_bench,
+    smoke={"rows_a": 4, "cols_a": 4, "rows_b": 8, "cols_b": 8,
+           "seeds_per_shape": 2, "refs": 10, "bk_rows": 8, "bk_cols": 8,
+           "bk_batch": 2},
+)
+
+
+def main(argv=None) -> BenchReport:
+    return bench_main(BENCH, argv)
 
 
 if __name__ == "__main__":

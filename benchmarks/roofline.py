@@ -1,5 +1,7 @@
 """Roofline analysis from the dry-run's compiled artifacts (§Roofline).
 
+    PYTHONPATH=src python benchmarks/roofline.py [--out f]
+
 TPU v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
 ``compiled.cost_analysis()`` on an SPMD-partitioned executable reports
 PER-DEVICE FLOPs/bytes (verified empirically: an 8-way sharded matmul
@@ -15,7 +17,12 @@ count for the per-device useful-compute ratio.
 from __future__ import annotations
 
 import json
+import sys
 from pathlib import Path
+
+sys.path.insert(0, "src")
+
+from repro.bench import BenchReport, Benchmark, bench_main      # noqa: E402
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -94,8 +101,24 @@ def render_table(cells, mesh: str = "single") -> str:
     return "\n".join(rows)
 
 
-def main() -> None:
-    cells = load_cells()
+def add_args(ap) -> None:
+    ap.add_argument("--dryrun-dir", default="results/dryrun",
+                    help="directory of dry-run artifact JSONs "
+                         "(python -m repro.launch.dryrun --all)")
+
+
+def run_bench(args) -> BenchReport:
+    """Contract entry: analyse the dry-run artifacts when present (the
+    report is empty — not an error — when none exist yet)."""
+    rep = BenchReport("roofline", meta={"params": {
+        "dryrun_dir": args.dryrun_dir}})
+    if not Path(args.dryrun_dir).exists() or \
+            not any(Path(args.dryrun_dir).glob("*.json")):
+        print(f"(no dry-run artifacts under {args.dryrun_dir}; run "
+              f"`python -m repro.launch.dryrun --all` first)")
+        rep.meta["skipped"] = "no dry-run artifacts"
+        return rep
+    cells = load_cells(args.dryrun_dir)
     print("\n=== roofline (single-pod) ===")
     print(render_table(cells, "single"))
     print("\n=== multi-pod (2x16x16): compile-proof cells ===")
@@ -103,6 +126,28 @@ def main() -> None:
           "assignment; multi-pod cells prove the 'pod' axis shards — "
           "raw HLO numbers below are scan-undercounted, see EXPERIMENTS)")
     print(render_table(cells, "multi"))
+    rep.raw = {"cells": cells}
+    for c in cells:
+        if c.get("skipped") or "error" in c or not c.get("arch"):
+            continue
+        key = f"roofline.{c['arch']}.{c.get('shape', '')}.{c.get('mesh', '')}"
+        rep.add(f"{key}.mfu_bound", round(c.get("mfu_bound", 0.0), 4),
+                unit="ratio", direction="higher", gate=False,
+                tags={"bottleneck": c.get("bottleneck", "?")})
+    return rep
+
+
+BENCH = Benchmark(
+    area="roofline",
+    title="Roofline analysis over the dry-run compile artifacts",
+    add_args=add_args,
+    run=run_bench,
+    gated=False,
+)
+
+
+def main(argv=None) -> BenchReport:
+    return bench_main(BENCH, argv)
 
 
 if __name__ == "__main__":

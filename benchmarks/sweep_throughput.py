@@ -1,6 +1,6 @@
 """Sweep-engine throughput: batched ``run_sweep`` vs a sequential ``run()`` loop.
 
-    PYTHONPATH=src python benchmarks/sweep_throughput.py --rows 16 --cols 16
+    PYTHONPATH=src python benchmarks/sweep_throughput.py [--smoke] [--out f]
 
 The default scenario set is a *deflection-policy sweep* (the realistic
 use of a sweep engine, cf. the Ausavarungnirun-style studies): every
@@ -24,12 +24,14 @@ Reported numbers:
 
 The run also cross-checks that batched stats are bit-identical to the
 sequential ones, so no speedup is ever bought with wrong numbers.
+
+Emits ``BENCH_sweep.json``: gated metrics are the cold/warm speedup
+ratios, the compile counts (distinct configs) and the deterministic
+cycle/health counters; raw walls and scenarios/sec ride along ungated.
 """
 from __future__ import annotations
 
-import argparse
 import dataclasses
-import json
 import sys
 import time
 
@@ -42,9 +44,13 @@ from repro.core.engine import expose_host_devices          # noqa: E402
 
 expose_host_devices()
 
-from repro.core.config import SimConfig                    # noqa: E402
-from repro.core.sweep import (                             # noqa: E402
+from repro.bench import BenchReport, Benchmark, bench_main  # noqa: E402
+from repro.bench.collect import (                           # noqa: E402
+    count_metric, flag_metric, health_metrics, ratio_metric, timing_metric)
+from repro.core import SimConfig                            # noqa: E402
+from repro.core.sweep import (                              # noqa: E402
     ScenarioSpec, SweepSpec, run_sequential, run_sweep)
+
 
 def policy_axis(n: int):
     """Migration-policy sensitivity axis: base, migration-off, then a
@@ -73,8 +79,7 @@ def build_spec(cfg: SimConfig, apps, seeds, refs: int,
     return SweepSpec(cfg, scenarios)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
+def add_args(ap) -> None:
     ap.add_argument("--rows", type=int, default=16)
     ap.add_argument("--cols", type=int, default=16)
     # default workload: one app so scenario lengths are near-uniform (the
@@ -92,9 +97,11 @@ def main() -> None:
     ap.add_argument("--n-policies", type=int, default=32,
                     help="size of the policy sensitivity axis; 0 = plain "
                          "apps x seeds sweep with one shared policy")
-    ap.add_argument("--json", default=None)
-    args = ap.parse_args()
 
+
+def run_bench(args) -> BenchReport:
+    """Contract entry: cold + warm sequential-vs-sweep comparison with
+    the bit-exactness cross-check; emits ``BENCH_sweep.json`` metrics."""
     cfg = SimConfig(rows=args.rows, cols=args.cols,
                     centralized_directory=False)
     cfg = dataclasses.replace(cfg, max_cycles=args.max_cycles)
@@ -121,7 +128,7 @@ def main() -> None:
     run_sweep(spec, chunk=args.chunk)
     warm_sweep = time.time() - t0
 
-    payload = {
+    raw = {
         "nodes": cfg.num_nodes,
         "n_scenarios": spec.size,
         "n_distinct_configs": n_cfgs,
@@ -140,12 +147,47 @@ def main() -> None:
         "max_cycles_simulated": max(r["cycles"] for r in got),
         "all_finished": all(r["finished"] for r in got),
     }
-    print(json.dumps(payload, indent=1))
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump(payload, f)
+
+    tags = {"mesh": f"{args.rows}x{args.cols}", "apps": args.apps}
+    rep = BenchReport("sweep", meta={"params": {
+        "refs": args.refs, "chunk": args.chunk,
+        "n_policies": args.n_policies, "seeds": args.seeds}}, raw=raw)
+    rep.extend([
+        count_metric("sweep.n_scenarios", raw["n_scenarios"],
+                     direction="higher", tags=tags),
+        count_metric("sweep.n_distinct_configs", raw["n_distinct_configs"],
+                     unit="compiles", direction="higher", tags=tags),
+        flag_metric("sweep.bit_identical", raw["bit_identical"]),
+        flag_metric("sweep.all_finished", raw["all_finished"]),
+        ratio_metric("sweep.cold_speedup", raw["speedup"], tags=tags),
+        ratio_metric("sweep.warm_speedup", raw["warm_speedup"], tags=tags),
+        timing_metric("sweep.cold_sequential_s", raw["cold_sequential_s"]),
+        timing_metric("sweep.cold_sweep_s", raw["cold_sweep_s"]),
+        timing_metric("sweep.warm_sequential_s", raw["warm_sequential_s"]),
+        timing_metric("sweep.warm_sweep_s", raw["warm_sweep_s"]),
+        timing_metric("sweep.cold_scenarios_per_sec",
+                      raw["cold_sweep_scenarios_per_sec"], unit="scen/s",
+                      direction="higher", tags=tags),
+        count_metric("sweep.max_cycles_simulated",
+                     raw["max_cycles_simulated"], unit="cycles", tags=tags),
+    ])
+    rep.extend(health_metrics(got, "sweep.net", tags=tags))
     if mismatches:
         raise SystemExit("batched sweep diverged from sequential runs")
+    return rep
+
+
+BENCH = Benchmark(
+    area="sweep",
+    title="Batched policy sweep vs sequential solo loop (cold + warm)",
+    add_args=add_args,
+    run=run_bench,
+    smoke={"rows": 8, "cols": 8, "refs": 15, "n_policies": 4},
+)
+
+
+def main(argv=None) -> BenchReport:
+    return bench_main(BENCH, argv)
 
 
 if __name__ == "__main__":

@@ -1,20 +1,27 @@
 """Paper Table 4: cache configuration vs maximum simulatable core count.
 
+    PYTHONPATH=src python benchmarks/table4_memory.py [--out f]
+
 The paper's limit is GPU global memory (43k cores on a GTX 690, dropping
 to 30k with migration metadata, 2k with big caches).  Here: exact
 simulator-state bytes per simulated core for each cache configuration, and
 the implied maximum cores per 16 GiB TPU v5e chip and per 512-chip job.
+``bytes_per_core`` is a pure function of the state layout, so the metric
+gates at zero slack: any state-struct growth shows up here first.
 """
 from __future__ import annotations
 
-import argparse
-import json
+import sys
 
-import jax
-import numpy as np
+sys.path.insert(0, "src")
 
-from repro.core.config import CacheConfig, SimConfig
-from repro.core.state import init_state
+import jax                                                      # noqa: E402
+import numpy as np                                              # noqa: E402
+
+from repro.bench import BenchReport, Benchmark, bench_main      # noqa: E402
+from repro.core import SimConfig                                # noqa: E402
+from repro.core.config import CacheConfig                       # noqa: E402
+from repro.core.state import init_state                         # noqa: E402
 
 CONFIGS = [
     ("L1 128x4, L2 512x8 (paper row 1)", CacheConfig(128, 4, 32, 512, 8, 64), True),
@@ -42,7 +49,12 @@ def bytes_per_core(cache: CacheConfig, migration: bool, refs: int = 200) -> int:
     return total // cfg.num_nodes
 
 
-def main(out_json=None):
+def add_args(ap) -> None:
+    pass   # the table is parameter-free (configs are the paper's rows)
+
+
+def run_bench(args) -> BenchReport:
+    """Contract entry: state bytes/core per cache config + implied caps."""
     rows = []
     print(f"{'config':38s} {'B/core':>8s} {'max cores/chip':>15s} "
           f"{'max cores/512':>14s}")
@@ -54,13 +66,29 @@ def main(out_json=None):
                      "max_512": per_chip * 512})
         print(f"{name:38s} {b:>8d} {per_chip:>15,d} {per_chip*512:>14,d}")
     print("\npaper (GTX 690, 2 GiB/GPU): 2,000 / 10,000 / 30,000 / 43,000")
-    if out_json:
-        with open(out_json, "w") as f:
-            json.dump(rows, f, indent=1)
-    return rows
+    rep = BenchReport("table4", raw={"rows": rows})
+    for i, row in enumerate(rows):
+        rep.add(f"table4.row{i}.bytes_per_core", row["bytes_per_core"],
+                unit="B/core", direction="lower",
+                tags={"config": row["config"]})
+        rep.add(f"table4.row{i}.max_per_chip", row["max_per_chip"],
+                unit="cores", direction="higher", gate=False,
+                tags={"config": row["config"]})
+    return rep
+
+
+BENCH = Benchmark(
+    area="table4",
+    title="Paper Table 4: simulator-state bytes/core vs max simulated cores",
+    add_args=add_args,
+    run=run_bench,
+    gated=False,
+)
+
+
+def main(argv=None) -> BenchReport:
+    return bench_main(BENCH, argv)
 
 
 if __name__ == "__main__":
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--json", default=None)
-    main(ap.parse_args().json)
+    main()

@@ -6,9 +6,8 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core.config import SimConfig
+from repro.core import SimConfig, run
 from repro.core.ref_serial import SerialSim
-from repro.core.sim import run
 from repro.core.trace import app_trace
 
 

@@ -1,0 +1,168 @@
+#!/usr/bin/env python
+"""Perf regression gate: diff fresh BENCH reports against committed baselines.
+
+    # CI / local check: run the gated smoke tier, diff, trend, exit 1 on
+    # any out-of-slack regression
+    PYTHONPATH=src python scripts/bench_gate.py --smoke
+
+    # compare pre-generated reports instead of running benchmarks
+    PYTHONPATH=src python scripts/bench_gate.py --fresh-dir results
+
+    # refresh the committed baselines from a fresh smoke run
+    PYTHONPATH=src python scripts/bench_gate.py --smoke --update
+
+Baselines are the repo-root ``BENCH_<area>.json`` files (areas:
+``benchmarks/run.py`` ``GATED_AREAS``).  Comparison semantics —
+direction awareness, per-metric slack, vanished/new metrics — live in
+:mod:`repro.bench.gate`; this script only orchestrates subprocesses,
+git-history trends and exit codes.  See ``docs/benchmarks.md``.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.bench import (BenchReport, compare_reports, gate_passes,   # noqa: E402
+                         render_findings, render_trend)
+
+
+def _harness():
+    """The benchmark harness module (single source of areas/files)."""
+    spec = importlib.util.spec_from_file_location(
+        "bench_run", REPO_ROOT / "benchmarks" / "run.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def baseline_path(area: str, baseline_dir: Path) -> Path:
+    return baseline_dir / f"BENCH_{area}.json"
+
+
+def git_history(area: str, baseline_dir: Path, limit: int = 6):
+    """Past committed versions of the area baseline, oldest first, as
+    ``(short_rev, BenchReport)`` pairs.  Best-effort: returns ``[]`` when
+    git (or the history) is unavailable."""
+    rel = os.path.relpath(baseline_path(area, baseline_dir), REPO_ROOT)
+    try:
+        revs = subprocess.run(
+            ["git", "log", "--format=%h", "-n", str(limit), "--", rel],
+            cwd=REPO_ROOT, capture_output=True, text=True, timeout=30,
+        ).stdout.split()
+        out = []
+        for rev in reversed(revs):
+            show = subprocess.run(["git", "show", f"{rev}:{rel}"],
+                                  cwd=REPO_ROOT, capture_output=True,
+                                  text=True, timeout=30)
+            if show.returncode == 0:
+                out.append((rev, BenchReport.from_json(show.stdout)))
+        return out
+    except Exception:
+        return []
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Diff fresh benchmark reports against the committed "
+                    "BENCH_<area>.json baselines.")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the gated benchmarks at their smoke tier "
+                         "into a temp dir, then diff (the CI mode)")
+    ap.add_argument("--fresh-dir", default=None, metavar="DIR",
+                    help="diff pre-generated BENCH_<area>.json reports "
+                         "from DIR instead of running benchmarks")
+    ap.add_argument("--baseline-dir", default=str(REPO_ROOT), metavar="DIR",
+                    help="where the committed baselines live "
+                         "(default: repo root)")
+    ap.add_argument("--areas", default=None,
+                    help="comma list of areas to gate (default: the "
+                         "harness GATED_AREAS)")
+    ap.add_argument("--slack-scale", type=float, default=1.0,
+                    help="multiply every baseline slack (loosen a noisy "
+                         "host with e.g. 2.0 without editing baselines)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy the fresh reports over the baselines "
+                         "instead of failing on drift (refresh workflow)")
+    ap.add_argument("--no-trend", action="store_true",
+                    help="skip the git-history trend table")
+    args = ap.parse_args(argv)
+
+    if bool(args.smoke) == bool(args.fresh_dir):
+        ap.error("choose exactly one of --smoke (run benchmarks) or "
+                 "--fresh-dir DIR (pre-generated reports)")
+
+    harness = _harness()
+    areas = [a.strip() for a in args.areas.split(",")] if args.areas \
+        else list(harness.GATED_AREAS)
+    baseline_dir = Path(args.baseline_dir)
+
+    tmp = None
+    if args.smoke:
+        tmp = tempfile.mkdtemp(prefix="bench_gate_")
+        fresh_dir = Path(tmp)
+        for area in areas:
+            print(f"== running {area} (smoke) ==", flush=True)
+            rc = harness.invoke(area, smoke=True,
+                                out=str(fresh_dir / f"BENCH_{area}.json"))
+            if rc:
+                print(f"bench_gate: {area} benchmark FAILED (exit {rc})",
+                      file=sys.stderr)
+                return rc
+    else:
+        fresh_dir = Path(args.fresh_dir)
+
+    failed = False
+    for area in areas:
+        fresh_path = fresh_dir / f"BENCH_{area}.json"
+        base_path = baseline_path(area, baseline_dir)
+        if not fresh_path.exists():
+            print(f"bench_gate: missing fresh report {fresh_path}",
+                  file=sys.stderr)
+            failed = True
+            continue
+        if not base_path.exists():
+            if args.update:
+                shutil.copyfile(fresh_path, base_path)
+                print(f"{area}: no baseline yet — seeded {base_path}")
+                continue
+            print(f"bench_gate: missing baseline {base_path} "
+                  f"(seed it with --update)", file=sys.stderr)
+            failed = True
+            continue
+        base = BenchReport.read(str(base_path))
+        fresh = BenchReport.read(str(fresh_path))
+        findings = compare_reports(base, fresh,
+                                   slack_scale=args.slack_scale)
+        print()
+        print(render_findings(area, findings))
+        if not args.no_trend:
+            history = git_history(area, baseline_dir)
+            print(render_trend(history + [("fresh", fresh)]))
+        if args.update:
+            shutil.copyfile(fresh_path, base_path)
+            print(f"{area}: baseline refreshed at {base_path}")
+        elif not gate_passes(findings):
+            failed = True
+
+    if tmp:
+        shutil.rmtree(tmp, ignore_errors=True)
+    if failed:
+        print("\nbench gate: FAIL (out-of-slack regression or missing "
+              "report — see above; refresh intentionally with --update)",
+              file=sys.stderr)
+        return 1
+    print("\nbench gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -26,6 +26,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
 
 #: modules whose whole ``__all__`` must be documented
 MODULES = [
+    "repro.core",
+    "repro.bench",
     "repro.core.engine",
     "repro.core.sweep",
     "repro.core.sharded",
@@ -38,6 +40,11 @@ MODULES = [
 #: (module, symbol): every signature parameter must appear in the
 #: docstring (class + __init__ docstrings count for classes)
 NAMED_SURFACE = [
+    ("repro.core", "run"),
+    ("repro.core", "make_scenario"),
+    ("repro.bench", "Metric"),
+    ("repro.bench", "Benchmark"),
+    ("repro.bench", "compare_reports"),
     ("repro.core.engine", "Scenario"),
     ("repro.core.engine", "compile_plan"),
     ("repro.core.engine", "execute_plan"),

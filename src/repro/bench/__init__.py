@@ -1,0 +1,30 @@
+"""Benchmark-telemetry subsystem: the metrics contract, collectors and
+regression gate behind the repo's committed perf trajectory.
+
+The pieces (see ``docs/benchmarks.md``):
+
+* :mod:`repro.bench.schema` — ``Metric``/``BenchReport``: the JSON
+  round-trippable contract every benchmark emits.
+* :mod:`repro.bench.collect` — shared collectors (network-health
+  counters from the ``STAT_NAMES`` surface, timing/ratio/count/flag
+  conventions).
+* :mod:`repro.bench.contract` — the one benchmark entry contract
+  (``Benchmark`` + ``bench_main`` with common ``--smoke/--out/--json``).
+* :mod:`repro.bench.gate` — direction-aware baseline diffing + trend
+  rendering (driven by ``scripts/bench_gate.py``).
+
+Import cost is deliberately tiny (stdlib + the pure-python core stats
+helpers) so the gate script can parse and diff reports without paying a
+jax import.
+"""
+from .schema import BenchReport, Metric, SCHEMA_VERSION
+from .contract import Benchmark, bench_main
+from .gate import (Finding, compare_reports, gate_passes, render_findings,
+                   render_trend)
+
+__all__ = [
+    "Metric", "BenchReport", "SCHEMA_VERSION",
+    "Benchmark", "bench_main",
+    "Finding", "compare_reports", "gate_passes", "render_findings",
+    "render_trend",
+]

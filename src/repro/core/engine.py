@@ -230,7 +230,17 @@ def make_scenario(base: SimConfig, rows: Optional[int] = None,
                   seed: int = 0, refs_per_core: int = 200,
                   **overrides) -> Scenario:
     """Scenario constructor: ``base`` config + shape + any SimConfig
-    overrides (structural or knob — the planner sorts out which)."""
+    overrides (structural or knob — the planner sorts out which).
+
+    Args:
+        base: the config every non-overridden field comes from.
+        rows: mesh rows override (default: ``base.rows``).
+        cols: mesh columns override (default: ``base.cols``).
+        app: workload source spec (registry grammar).
+        seed: trace-synthesis seed.
+        refs_per_core: memory references per core.
+        **overrides: any further SimConfig field overrides.
+    """
     kw = dict(overrides)
     if rows is not None:
         kw["rows"] = rows

@@ -52,7 +52,8 @@ from .state import (F_DST, F_VALID, P_VALID, R_NFL, Geometry, NodeCtx,
                     SimState, init_state, make_geometry, make_node_ctx)
 
 __all__ = ["cycle_step", "finished", "run", "stats_list", "ExecAux",
-           "VectorSim", "ABORT_LABELS", "diag_counts"]
+           "VectorSim", "ABORT_LABELS", "diag_counts",
+           "aggregate_stats", "network_health"]
 
 I32 = jnp.int32
 
@@ -320,14 +321,61 @@ def stats_list(s: SimState, aux: ExecAux) -> List[Dict[str, int]]:
     return out
 
 
+def aggregate_stats(stats: List[Dict[str, int]]) -> Dict[str, int]:
+    """Sum the ``STAT_NAMES`` counters over per-scenario ``stats`` dicts
+    (as produced by :func:`stats_list` / :func:`run`); ``cycles`` becomes
+    the max and ``finished`` the min, so the aggregate reads like one
+    worst-case scenario.  Non-counter diagnostic keys are dropped."""
+    out = {k: sum(int(d.get(k, 0)) for d in stats) for k in STAT_NAMES}
+    out["cycles"] = max((int(d.get("cycles", 0)) for d in stats), default=0)
+    out["finished"] = min((int(d.get("finished", 0)) for d in stats),
+                          default=0)
+    return out
+
+
+def network_health(stats: Dict[str, int]) -> Dict[str, float]:
+    """Derived network-health ratios from one statistics dict ``stats``
+    (a solo result or an :func:`aggregate_stats` roll-up) — the
+    deflection-routing metrics the literature tracks alongside raw
+    throughput (deflection rate, ejection-latency proxy, recovered
+    drops):
+
+    * ``deflection_rate`` — deflections per hop: the fraction of routing
+      decisions that missed their productive port.
+    * ``hops_per_flit`` — average hops each *delivered* flit took.  In a
+      bufferless mesh every deflection is a detour, so this proxies
+      in-network (ejection) latency without per-flit timestamps.
+    * ``deflections_per_flit`` — detours per delivered flit (the same
+      latency proxy normalized to the minimal-route floor).
+    * ``drops_recovered`` — whole-packet response drops recovered by the
+      retransmit path (``send_drop``); ``stray_responses`` — stale
+      duplicates absorbed after a transaction restart.
+    """
+    hops = int(stats.get("hops", 0))
+    defl = int(stats.get("deflections", 0))
+    flits = int(stats.get("flits_delivered", 0))
+    return {
+        "deflection_rate": defl / hops if hops else 0.0,
+        "hops_per_flit": hops / flits if flits else 0.0,
+        "deflections_per_flit": defl / flits if flits else 0.0,
+        "drops_recovered": int(stats.get("send_drop", 0)),
+        "stray_responses": int(stats.get("stray", 0)),
+    }
+
+
 def run(cfg: SimConfig, trace: np.ndarray, max_cycles: Optional[int] = None,
         chunk: int = 1) -> Union[Dict[str, int], List[Dict[str, int]]]:
     """Run the simulator to completion; returns statistics.
 
-    ``trace`` is ``(num_nodes, M)`` for a solo run (returns one dict) or
-    ``(B, num_nodes, M)`` for a batched run (returns a list of dicts; the
-    policy knobs are then shared — use :mod:`repro.core.sweep` or
-    :mod:`repro.core.engine` to vary them per scenario)."""
+    Args:
+        cfg: the simulation config (mesh shape, caches, policies).
+        trace: ``(num_nodes, M)`` for a solo run (returns one dict) or
+            ``(B, num_nodes, M)`` for a batched run (returns a list of
+            dicts; the policy knobs are then shared — use
+            :mod:`repro.core.sweep` or :mod:`repro.core.engine` to vary
+            them per scenario).
+        max_cycles: hard cycle cap (default ``cfg.max_cycles``).
+        chunk: simulated cycles per device-loop termination check."""
     s = init_state(cfg, trace)
     solo = s.cycle.ndim == 0
     s, aux = _run_jit(s, cfg, jnp.asarray(max_cycles or cfg.max_cycles,

@@ -35,7 +35,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
+import warnings
 
 from repro.core.workloads import source_summary
 
@@ -93,7 +95,8 @@ def build_parser() -> argparse.ArgumentParser:
                          "backend that is structurally impossible degrades "
                          "to sweep with a note")
     ap.add_argument("--sharded", action="store_true",
-                    help="legacy alias for --backend sharded")
+                    help="DEPRECATED legacy alias for --backend sharded "
+                         "(emits a DeprecationWarning; will be removed)")
     ap.add_argument("--sweep", action="store_true",
                     help="batched sweep mode: run the --apps x --seeds "
                          "cross-product as one plan (default backend: "
@@ -122,9 +125,19 @@ def build_parser() -> argparse.ArgumentParser:
     return ap
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    """Launcher entry point; ``argv`` defaults to ``sys.argv[1:]``
+    (injectable for tests)."""
     ap = build_parser()
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
+
+    if args.sharded:
+        warnings.warn(
+            "--sharded is deprecated and will be removed; "
+            "use --backend sharded instead",
+            DeprecationWarning, stacklevel=2)
+        print("warning: --sharded is deprecated; use --backend sharded",
+              file=sys.stderr)
 
     if args.zoo == "list":
         from repro.core.zoo import zoo_summary
@@ -141,7 +154,7 @@ def main() -> None:
     if args.sharded and args.backend not in ("auto", "sharded"):
         ap.error(f"--sharded conflicts with --backend {args.backend}")
 
-    from repro.core.config import SimConfig
+    from repro.core import SimConfig
     kw = {}
     if args.pc_depth is not None:
         kw["pc_depth"] = args.pc_depth

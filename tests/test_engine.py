@@ -265,3 +265,26 @@ def test_plan_cli_smoke():
     assert payload["plan"]["n_buckets"] == 2
     assert payload["n_scenarios"] == 2
     assert all(s["finished"] for s in payload["scenarios"])
+
+
+def test_sharded_flag_deprecation_warning():
+    """`--sharded` still works but is a deprecated alias for
+    `--backend sharded`: it must emit a DeprecationWarning (and a stderr
+    note for shell users) while producing the same run."""
+    out = subprocess.run(
+        [sys.executable, "-W", "error::DeprecationWarning",
+         "-m", "repro.launch.simulate",
+         "--rows", "4", "--cols", "4", "--refs", "10", "--sharded"],
+        cwd=REPO_ROOT, capture_output=True, text=True, timeout=900,
+        env={**os.environ, "PYTHONPATH": "src", "JAX_PLATFORMS": "cpu"})
+    assert out.returncode != 0          # -W error promotes it to a crash
+    assert "--sharded is deprecated" in out.stderr, out.stderr[-2000:]
+
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.simulate",
+         "--rows", "4", "--cols", "4", "--refs", "10", "--sharded"],
+        cwd=REPO_ROOT, capture_output=True, text=True, timeout=900,
+        env={**os.environ, "PYTHONPATH": "src", "JAX_PLATFORMS": "cpu"})
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "use --backend sharded" in out.stderr
+    assert json.loads(out.stdout)["finished"]
