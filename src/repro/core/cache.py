@@ -303,7 +303,7 @@ def commit_queue(s: SimState, cfg: SimConfig, descs: List[Desc]):
     for d in descs:
         ok = d.valid & (q_size + off < qp)
         drops = drops + jnp.sum((d.valid & ~ok).astype(I32))
-        pkt = (pkt_ctr + off) & 0x3FFFFFFF
+        pkt = (pkt_ctr + off) & (cfg.pkt_wrap - 1)
         rows.append(jnp.stack(
             [d.typ, d.dst, d.osrc, d.tag, pkt,
              FLITS_TABLE[jnp.clip(d.typ, 0, len(FLITS_OF) - 1)]], axis=-1))
@@ -629,7 +629,9 @@ def _next_addr(s: SimState, cfg: SimConfig):
     m = s.trace.shape[1]
     node = jnp.arange(s.trace.shape[0], dtype=I32)
     ptr = jnp.clip(s.tr_ptr, 0, m - 1)
-    a = s.trace[node, ptr]
+    # trace is the one leaf widen_state leaves in storage dtype (read-only
+    # (N, M) block) — widen after the gather, not the whole array
+    a = s.trace[node, ptr].astype(I32)
     exhausted = (s.tr_ptr >= m) | (a < 0)
     return jnp.where(exhausted, -1, a), exhausted
 

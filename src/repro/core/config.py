@@ -158,6 +158,20 @@ class SimConfig:
     flit_dtype: str = "int32"
     dir_layout: str = "flat"   # "flat" | "home" (home = sharded with nodes)
     use_pallas_router: bool = False   # Phase-2 arbitration via Pallas kernel
+    # Storage layout of SimState (repro.core.state.leaf_dtypes):
+    #   "wide"   — every leaf is int32 (the historical layout).
+    #   "packed" — each leaf gets the smallest of int8/int16/int32 that
+    #              holds its validated value bounds (FSM states and flags
+    #              in int8, tags/ids/addresses in int16 where addr_bits /
+    #              num_nodes / max_cycles permit).  All phases still
+    #              compute in int32 — state is widened on load and
+    #              narrowed on store at the cycle boundary — so semantics
+    #              and serial golden-model bit-parity are unchanged.
+    #              Packet ids then wrap at 2**14 instead of 2**30
+    #              (mirrored in the serial model), which is aliasing-free
+    #              while in-flight packets per source stay below 16384.
+    #              (Structural: changes buffer dtypes / compiled programs.)
+    state_dtype_policy: str = "wide"
 
     @property
     def num_nodes(self) -> int:
@@ -173,6 +187,14 @@ class SimConfig:
     def dir_entries(self) -> int:
         return (1 << self.addr_bits) >> self.cache.l2_shift
 
+    @property
+    def pkt_wrap(self) -> int:
+        """Modulus of the per-source packet-id counter.  The wide layout
+        keeps the historical 2**30; the packed layout wraps at 2**14 so
+        packet ids fit int16 state (unique while in-flight packets per
+        source stay below 16384 — far beyond ROB/queue capacity)."""
+        return (1 << 14) if self.state_dtype_policy == "packed" else (1 << 30)
+
     def dir_home(self, tag: int) -> int:
         """Node id owning the directory entry for ``tag``."""
         if self.centralized_directory:
@@ -187,6 +209,25 @@ class SimConfig:
         assert self.pc_depth >= 1, "pending-completion queue needs >= 1 slot"
         assert self.eject_age_threshold >= 0
         assert self.req_timeout >= 1
+        if self.state_dtype_policy not in ("wide", "packed"):
+            raise ValueError(
+                f"state_dtype_policy must be 'wide' or 'packed', got "
+                f"{self.state_dtype_policy!r}")
+        if self.state_dtype_policy == "packed":
+            # l2_streak is stored int16 with a saturating narrow at 32767;
+            # every threshold comparison is then exact iff the threshold
+            # itself stays below the saturation point.
+            if self.migrate_threshold > 32766:
+                raise ValueError(
+                    "packed state layout stores migration streaks in int16 "
+                    f"(saturating at 32767); migrate_threshold="
+                    f"{self.migrate_threshold} would make threshold "
+                    "comparisons inexact — use the wide layout")
+            if self.addr_bits > 30:
+                raise ValueError(
+                    "packed state layout needs addresses (and their "
+                    f"packet-id headroom) inside int32; addr_bits="
+                    f"{self.addr_bits} > 30")
 
 
 # Paper presets -------------------------------------------------------------

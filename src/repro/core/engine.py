@@ -77,6 +77,7 @@ __all__ = [
     "compile_plan", "execute_plan", "plan_and_run", "load_manifest",
     "expose_host_devices", "CostConstants", "cost_constants",
     "set_cost_constants", "load_cost_constants", "save_cost_constants",
+    "parse_mem_budget", "plan_state_bytes",
 ]
 
 
@@ -180,6 +181,66 @@ def save_cost_constants(path: str, c: CostConstants,
 
 if os.environ.get("REPRO_COST_MODEL"):
     load_cost_constants(os.environ["REPRO_COST_MODEL"])
+
+
+# ---------------------------------------------------------------------------
+# Memory model
+# ---------------------------------------------------------------------------
+
+_MEM_SUFFIX = {"k": 1 << 10, "m": 1 << 20, "g": 1 << 30, "t": 1 << 40}
+
+
+def parse_mem_budget(text: Optional[str]) -> Optional[int]:
+    """Parse a per-device memory budget: a byte count, optionally with a
+    binary suffix (``512M``, ``4G``, ``1.5g``).  ``None``/empty → no
+    budget."""
+    if text is None or not str(text).strip():
+        return None
+    t = str(text).strip().lower().rstrip("b").rstrip("i")
+    mul = 1
+    if t and t[-1] in _MEM_SUFFIX:
+        mul = _MEM_SUFFIX[t[-1]]
+        t = t[:-1]
+    try:
+        val = int(float(t) * mul)
+    except ValueError:
+        raise ValueError(f"bad memory budget {text!r}; expected bytes with "
+                         "an optional K/M/G/T suffix, e.g. '512M'") from None
+    if val <= 0:
+        raise ValueError(f"memory budget must be positive, got {text!r}")
+    return val
+
+
+def plan_state_bytes(cfg: SimConfig, batch: int, backend: str,
+                     grid: Tuple[int, int, int], ndev: int,
+                     trace_len: int = 200) -> int:
+    """Estimated *resident* :class:`SimState` bytes per device for one
+    bucket under ``backend``/``grid``.
+
+    This counts the persistent simulation state only (at ``cfg``'s
+    ``state_dtype_policy``); per-cycle transients and the compiled
+    program ride on top, so treat budgets as a floor on what the device
+    must hold, not an exact high-water mark.  Donation (the run loops
+    update the state in place) is what makes the resident set ~one copy
+    rather than two."""
+    from .state import state_bytes
+    sb = state_bytes(cfg, trace_len=trace_len)
+    if backend == "sweep":
+        from .sweep import scenario_device_count
+        n = scenario_device_count(batch, ndev)
+        return -(-batch // n) * sb
+    if backend in ("sharded", "composed"):
+        nt = grid[-2] * grid[-1]
+        local_b = -(-batch // max(grid[0], 1)) if backend == "composed" else 1
+        return -(-local_b * sb // max(nt, 1))
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def _fmt_bytes(n: int) -> str:
+    for suf, mul in (("G", 1 << 30), ("M", 1 << 20), ("K", 1 << 10)):
+        if n >= mul:
+            return f"{n / mul:.1f}{suf}"
+    return f"{n}B"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -319,7 +380,9 @@ def backend_cost(backend: str, batch: int, nodes: int, ndev: int,
     raise ValueError(f"unknown backend {backend!r}")
 
 
-def choose_grid(batch: int, rows: int, cols: int, ndev: int
+def choose_grid(batch: int, rows: int, cols: int, ndev: int,
+                cfg: Optional[SimConfig] = None,
+                mem_budget: Optional[int] = None, trace_len: int = 200
                 ) -> Tuple[Tuple[int, int, int], float]:
     """Factor ``ndev`` into the cheapest composed ``(batch_shards,
     row_tiles, col_tiles)`` grid for a ``batch``-scenario bucket of
@@ -328,10 +391,13 @@ def choose_grid(batch: int, rows: int, cols: int, ndev: int
     Every split of the device count between the scenario axis and the
     spatial tiling (``choose_tiling`` on the remainder) is costed with
     :func:`backend_cost`; grids whose spatial part collapses to ``1x1``
-    are skipped (that regime belongs to the sweep backend).
+    are skipped (that regime belongs to the sweep backend).  With a
+    ``mem_budget`` (and ``cfg`` to size the state), grids whose
+    per-device resident state exceeds the budget are skipped too — the
+    planner re-tiles toward deeper spatial splits that fit.
 
     Returns: ``(grid, cost)``; ``((1, 1, 1), inf)`` when no composed
-    grid is structurally possible."""
+    grid is structurally possible (or none fits the budget)."""
     best, best_cost = (1, 1, 1), float("inf")
     nodes = rows * cols
     for bs in range(1, max(min(ndev, batch), 1) + 1):
@@ -339,6 +405,10 @@ def choose_grid(batch: int, rows: int, cols: int, ndev: int
         if rt * ct <= 1:
             continue
         grid = (bs, rt, ct)
+        if mem_budget is not None and cfg is not None and \
+                plan_state_bytes(cfg, batch, "composed", grid, ndev,
+                                 trace_len) > mem_budget:
+            continue
         cost = backend_cost("composed", batch, nodes, ndev, grid)
         if cost < best_cost:
             best, best_cost = grid, cost
@@ -351,7 +421,8 @@ _GRID_NONE = (1, 1, 1)
 
 
 def choose_backend(cfg: SimConfig, batch: int, ndev: int,
-                   force: Optional[str] = None
+                   force: Optional[str] = None,
+                   mem_budget: Optional[int] = None, trace_len: int = 200
                    ) -> Tuple[str, Tuple[int, int, int], str]:
     """Pick ``(backend, grid, note)`` for one bucket.
 
@@ -366,24 +437,52 @@ def choose_backend(cfg: SimConfig, batch: int, ndev: int,
             centralized directory, an indivisible mesh, or — for
             ``sharded`` — ``batch > 1``) degrades to ``sweep`` with an
             explanatory note instead of asserting.
+        mem_budget: per-device resident-state byte budget.  Candidates
+            over budget are dropped (composed re-tiles toward deeper
+            spatial splits first); if *no* candidate fits, or a forced
+            backend is over budget, ``ValueError`` — the fix is a packed
+            ``state_dtype_policy``, more devices, or a bigger budget.
+        trace_len: per-core trace length, for sizing the state.
 
     Returns: the backend name, its ``(batch_shards, row_tiles,
     col_tiles)`` device grid (``(1, 1, 1)`` for sweep), and a short
-    explanation when the choice was forced, degraded, or cost-driven."""
+    explanation when the choice was forced, degraded, cost-driven, or
+    shaped by the memory budget."""
     tiles = choose_tiling(cfg.rows, cfg.cols, ndev)
     spatial_ok = not cfg.centralized_directory and tiles != (1, 1)
-    grid, c_comp = (choose_grid(batch, cfg.rows, cfg.cols, ndev)
+    grid, c_comp = (choose_grid(batch, cfg.rows, cfg.cols, ndev, cfg=cfg,
+                                mem_budget=mem_budget, trace_len=trace_len)
                     if not cfg.centralized_directory
                     else (_GRID_NONE, float("inf")))
+
+    def fits(backend: str, g: Tuple[int, int, int]) -> bool:
+        return mem_budget is None or plan_state_bytes(
+            cfg, batch, backend, g, ndev, trace_len) <= mem_budget
+
+    def over_budget(backend: str, g: Tuple[int, int, int]) -> ValueError:
+        need = plan_state_bytes(cfg, batch, backend, g, ndev, trace_len)
+        return ValueError(
+            f"{backend} backend needs ~{_fmt_bytes(need)}/device for "
+            f"{batch}x{cfg.rows}x{cfg.cols} "
+            f"({cfg.state_dtype_policy} state), over the "
+            f"{_fmt_bytes(mem_budget)} budget; use state_dtype_policy="
+            "'packed', more devices, or a larger budget")
+
     if force == "sweep":
+        if not fits("sweep", _GRID_NONE):
+            raise over_budget("sweep", _GRID_NONE)
         return "sweep", _GRID_NONE, "forced"
     if force == "sharded":
         if batch == 1 and spatial_ok:
+            if not fits("sharded", (1,) + tiles):
+                raise over_budget("sharded", (1,) + tiles)
             return "sharded", (1,) + tiles, "forced"
         why = ("batch > 1" if batch > 1
                else "centralized directory" if cfg.centralized_directory
                else f"no device tiling divides {cfg.rows}x{cfg.cols} "
                     f"over {ndev} device(s)")
+        if not fits("sweep", _GRID_NONE):
+            raise over_budget("sweep", _GRID_NONE)
         return "sweep", _GRID_NONE, f"sharded unavailable ({why}); fell back"
     if force == "composed":
         if c_comp < float("inf"):
@@ -391,6 +490,8 @@ def choose_backend(cfg: SimConfig, batch: int, ndev: int,
         why = ("centralized directory" if cfg.centralized_directory
                else f"no device grid tiles {cfg.rows}x{cfg.cols} over "
                     f"{ndev} device(s)")
+        if not fits("sweep", _GRID_NONE):
+            raise over_budget("sweep", _GRID_NONE)
         return "sweep", _GRID_NONE, f"composed unavailable ({why}); fell back"
     if force is not None:
         raise ValueError(f"unknown backend {force!r}")
@@ -402,9 +503,17 @@ def choose_backend(cfg: SimConfig, batch: int, ndev: int,
     if batch > 1:
         # batch == 1 composed degenerates to sharded — already a candidate
         cands.append((c_comp, "composed", grid))
+    dropped = [b for c, b, g in cands
+               if c < float("inf") and not fits(b, g)]
+    cands = [(c, b, g) for c, b, g in cands if fits(b, g)]
+    if not cands or min(c for c, _, _ in cands) == float("inf"):
+        raise over_budget("sweep", _GRID_NONE)
     cost, backend, grid = min(cands, key=lambda t: t[0])
     note = "" if backend == "sweep" \
         else f"cost {cost:.0f} < sweep {c_sweep:.0f}"
+    if dropped:
+        over = f"memory budget excluded {'/'.join(dropped)}"
+        note = f"{note}; {over}" if note else over
     return backend, grid, note
 
 
@@ -421,6 +530,8 @@ class Bucket:
         grid: the ``(batch_shards, row_tiles, col_tiles)`` device grid —
             ``(1, 1, 1)`` for sweep, ``(1, rt, ct)`` for sharded.
         note: why the planner chose/degraded this backend (may be empty).
+        mem_bytes: estimated resident state bytes per device
+            (:func:`plan_state_bytes`; 0 when not computed).
     """
 
     cfg: SimConfig                     # structural (knob-normalized) config
@@ -429,6 +540,7 @@ class Bucket:
     backend: str                       # "sweep" | "sharded" | "composed"
     grid: Tuple[int, int, int] = (1, 1, 1)
     note: str = ""
+    mem_bytes: int = 0                 # est. resident state bytes / device
 
     @property
     def batch(self) -> int:
@@ -453,16 +565,24 @@ class ExecutionPlan:
     scenarios: Tuple[Scenario, ...]
     buckets: Tuple[Bucket, ...]
     ndev: int
+    mem_budget: Optional[int] = None
 
     def describe(self) -> Dict:
-        """JSON-friendly summary (shape/batch/backend/grid per bucket)."""
+        """JSON-friendly summary: shape/batch/backend/grid per bucket,
+        plus each bucket's state-dtype policy and estimated resident
+        state bytes per device (and the budget they were planned
+        against, when one was set)."""
         return {
             "n_scenarios": len(self.scenarios),
             "n_buckets": len(self.buckets),
             "devices": self.ndev,
+            **({"mem_budget": self.mem_budget}
+               if self.mem_budget is not None else {}),
             "buckets": [{
                 "rows": b.cfg.rows, "cols": b.cfg.cols, "batch": b.batch,
                 "backend": b.backend,
+                "policy": b.cfg.state_dtype_policy,
+                "state_bytes_per_device": b.mem_bytes,
                 **({"tiles": list(b.tiles)} if b.backend == "sharded" else {}),
                 **({"grid": list(b.grid)} if b.backend == "composed" else {}),
                 **({"note": b.note} if b.note else {}),
@@ -471,7 +591,8 @@ class ExecutionPlan:
 
 
 def compile_plan(scenarios: Sequence[Scenario], ndev: Optional[int] = None,
-                 force_backend: Optional[str] = None) -> ExecutionPlan:
+                 force_backend: Optional[str] = None,
+                 mem_budget: Optional[int] = None) -> ExecutionPlan:
     """Bucket scenarios by structural config and choose each bucket's
     backend and device grid.
 
@@ -486,6 +607,10 @@ def compile_plan(scenarios: Sequence[Scenario], ndev: Optional[int] = None,
         force_backend: pin every bucket to ``"sweep"`` / ``"sharded"`` /
             ``"composed"``; impossible pins degrade per bucket with a
             note (see :func:`choose_backend`).
+        mem_budget: per-device resident-state byte budget; defaults to
+            ``$REPRO_MEM_BUDGET`` (``parse_mem_budget`` grammar, e.g.
+            ``512M``).  Buckets that cannot fit under any backend raise
+            ``ValueError`` (see :func:`choose_backend`).
 
     Returns: an :class:`ExecutionPlan`.  Deterministic: bucket order
     follows first appearance in ``scenarios``; per-bucket scenario order
@@ -497,6 +622,8 @@ def compile_plan(scenarios: Sequence[Scenario], ndev: Optional[int] = None,
     if ndev is None:
         import jax
         ndev = len(jax.local_devices())
+    if mem_budget is None:
+        mem_budget = parse_mem_budget(os.environ.get("REPRO_MEM_BUDGET"))
 
     groups: Dict[SimConfig, List[int]] = {}
     for i, sc in enumerate(scenarios):
@@ -511,11 +638,18 @@ def compile_plan(scenarios: Sequence[Scenario], ndev: Optional[int] = None,
         # directory layout both spatial backends require)
         any_central = any(sc.cfg.centralized_directory for sc in scs)
         probe = dataclasses.replace(key, centralized_directory=any_central)
+        # the batched drivers stack traces padded to the longest, so the
+        # footprint is sized by the bucket's largest refs_per_core
+        refs = max(sc.refs_per_core for sc in scs)
         backend, grid, note = choose_backend(probe, len(scs), ndev,
-                                             force_backend)
+                                             force_backend,
+                                             mem_budget=mem_budget,
+                                             trace_len=refs)
+        mem = plan_state_bytes(key, len(scs), backend, grid, ndev, refs)
         buckets.append(Bucket(cfg=key, scenarios=scs, indices=tuple(idxs),
-                              backend=backend, grid=grid, note=note))
-    return ExecutionPlan(tuple(scenarios), tuple(buckets), ndev)
+                              backend=backend, grid=grid, note=note,
+                              mem_bytes=mem))
+    return ExecutionPlan(tuple(scenarios), tuple(buckets), ndev, mem_budget)
 
 
 def _bucket_sweep_spec(b: Bucket):
@@ -599,9 +733,11 @@ def execute_plan(plan: ExecutionPlan, max_cycles: Optional[int] = None,
 def plan_and_run(scenarios: Sequence[Scenario],
                  max_cycles: Optional[int] = None, chunk: int = 8,
                  force_backend: Optional[str] = None,
-                 ndev: Optional[int] = None) -> List[Dict[str, int]]:
+                 ndev: Optional[int] = None,
+                 mem_budget: Optional[int] = None) -> List[Dict[str, int]]:
     """Convenience: compile + execute in one call."""
-    return execute_plan(compile_plan(scenarios, ndev, force_backend),
+    return execute_plan(compile_plan(scenarios, ndev, force_backend,
+                                     mem_budget=mem_budget),
                         max_cycles=max_cycles, chunk=chunk)
 
 

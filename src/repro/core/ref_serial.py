@@ -158,7 +158,7 @@ class SerialSim:
         if len(self.sendq[node]) >= self.cfg.send_queue:
             self.stats["send_drop"] += 1
             return
-        pkt = int(self.pkt_ctr[node]) & 0x3FFFFFFF
+        pkt = int(self.pkt_ctr[node]) & (self.cfg.pkt_wrap - 1)
         self.pkt_ctr[node] += 1
         self.sendq[node].append((typ, dst, osrc, tag, pkt, FLITS_OF[typ]))
 

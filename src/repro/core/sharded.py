@@ -42,9 +42,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from .cache import phase1a, phase1b
 from .config import SimConfig
 from .noc import deliver, phase2
-from .sim import (ABORT_LIVELOCK, ExecAux, _PROG_IDX, diag_counts,
-                  finished as _finished, stats_list)
-from .state import NUM_F, NodeCtx, SimState, init_state, make_geometry
+from .sim import (ABORT_LIVELOCK, ExecAux, _PROG_IDX, check_cycle_cap,
+                  diag_counts, finished as _finished, stats_list)
+from .state import (NUM_F, NodeCtx, SimState, fold_stats, init_state,
+                    leaf_dtypes, make_geometry, narrow_state, widen_state)
 
 __all__ = ["ShardedSim", "run_composed", "make_sharded_step", "to_grid",
            "state_specs", "make_geo_arrays"]
@@ -192,6 +193,14 @@ def make_sharded_step(cfg: SimConfig, mesh,
     tile_finished = jax.vmap(_finished) if batched else _finished
 
     def one_cycle(flat: SimState, ctx: NodeCtx, rt: int, ct: int) -> SimState:
+        # widen/narrow at the same per-cycle boundary as sim.cycle_step:
+        # phases (and the halo slabs) compute in int32, the scan carry
+        # stays in the storage layout.  Stats are folded per chunk in
+        # step_tile (after the cross-tile psum), not here — the tile-
+        # local low word has int32 headroom for any chunk length.
+        dtypes = leaf_dtypes(cfg, flat.trace.shape[-1])
+        flat = widen_state(flat)
+
         def p12(fs):
             s = phase1a(fs, cfg, ctx)
             s = phase1b(s, cfg, ctx)
@@ -212,7 +221,7 @@ def make_sharded_step(cfg: SimConfig, mesh,
             inp_next = _halo_transfer(out4, vp4, row_axes, col_axes,
                                       nrow, ncol)
             s = deliver(s, cfg, ctx, arb, inp_next.reshape(rt * ct, 4, NUM_F))
-        return s._replace(cycle=s.cycle + 1)
+        return narrow_state(s._replace(cycle=s.cycle + 1), dtypes)
 
     def step_tile(n_cycles: int, sg: SimState, nid2, nr2, nc2, vp2):
         lead = 1 if batched else 0
@@ -236,8 +245,11 @@ def make_sharded_step(cfg: SimConfig, mesh,
         # stats start replicated (across spatial tiles) but accumulate
         # device-local sums inside the scan; the psum below re-replicates
         # the delta (the shard_map replication check is disabled for
-        # exactly this carry)
-        in_stats = flat.stats
+        # exactly this carry).  Both words of the base-2**30 pair ride:
+        # component deltas reconstruct the exact value sum, and one fold
+        # after the psum restores the canonical (hi, lo) form — matching
+        # the dense driver's per-cycle fold bit for bit at chunk edges.
+        in_stats, in_hi = flat.stats, flat.stats_hi
 
         nspat = jax.lax.psum(jnp.ones((), I32), spatial_axes)
 
@@ -255,9 +267,10 @@ def make_sharded_step(cfg: SimConfig, mesh,
         flat, _ = jax.lax.scan(body, flat, None, length=n_cycles)
         # stats: replicate across spatial tiles via psum of the local
         # delta (never across the scenario axis — those are independent)
-        delta = flat.stats - in_stats
-        flat = flat._replace(
-            stats=in_stats + jax.lax.psum(delta, spatial_axes))
+        hi, lo = fold_stats(
+            in_hi + jax.lax.psum(flat.stats_hi - in_hi, spatial_axes),
+            in_stats + jax.lax.psum(flat.stats - in_stats, spatial_axes))
+        flat = flat._replace(stats=lo, stats_hi=hi)
         return grid_of(flat)
 
     cache = {}
@@ -271,7 +284,11 @@ def make_sharded_step(cfg: SimConfig, mesh,
                 out_specs=sspec,
                 **_SM_NOCHECK,
             )
-            cache[n_cycles] = jax.jit(smapped)
+            # donate the state (arg 0): in/out shardings and dtypes match
+            # leaf for leaf, so XLA updates the mesh in place instead of
+            # double-buffering it; the geometry args are reused each
+            # chunk and are not donated
+            cache[n_cycles] = jax.jit(smapped, donate_argnums=(0,))
         return cache[n_cycles]
 
     _BUILD_CACHE[ckey] = build
@@ -383,6 +400,7 @@ class ShardedSim:
 
         Returns: one stats dict for a solo spatial sim, or a list of B
         dicts in scenario order for a composed batched sim."""
+        check_cycle_cap(self.cfg, max_cycles)
         if self.batch is not None:
             return self._run_batched(max_cycles, chunk)
         return self._run_solo(max_cycles, chunk)
@@ -418,10 +436,11 @@ class ShardedSim:
             aux = ExecAux(
                 abort=np.int32(abort),
                 abort_cycle=np.asarray(s.cycle, np.int32),
-                abort_stats=np.asarray(s.stats), **d)
+                abort_stats=np.asarray(s.stats),
+                abort_stats_hi=np.asarray(s.stats_hi), **d)
         else:
-            aux = ExecAux(z, z, np.zeros_like(np.asarray(s.stats)),
-                          z, z, z, z, z)
+            zs = np.zeros_like(np.asarray(s.stats))
+            aux = ExecAux(z, z, zs, zs, z, z, z, z, z)
         return stats_list(s, aux)[0]
 
     def _run_batched(self, max_cycles, chunk):
@@ -440,6 +459,7 @@ class ShardedSim:
         abort = np.zeros(nb, np.int32)
         ab_cycle = np.zeros(nb, np.int32)
         ab_stats = np.zeros((nb, nstats), np.int32)
+        ab_hi = np.zeros((nb, nstats), np.int32)
         diag = {k: np.zeros(nb, np.int32)
                 for k in ("circ", "wait_dir", "wait_data", "stalled", "dst0")}
         fin = np.asarray(self._finished(self.state))
@@ -459,6 +479,7 @@ class ShardedSim:
             if not lw:
                 continue
             stats = np.asarray(self.state.stats)
+            stats_hi = np.asarray(self.state.stats_hi)
             cyc_now = np.asarray(self.state.cycle)
             st = inp = qs = None
             for b in np.nonzero(active)[0]:
@@ -471,6 +492,7 @@ class ShardedSim:
                     abort[b] = ABORT_LIVELOCK
                     ab_cycle[b] = int(cyc_now[b])
                     ab_stats[b] = stats[b]
+                    ab_hi[b] = stats_hi[b]
                     if st is None:   # pull the big arrays at most once
                         st = np.asarray(self.state.st)
                         inp = np.asarray(self.state.inp)
@@ -478,6 +500,7 @@ class ShardedSim:
                     for k, v in diag_counts(st[b], inp[b], qs[b]).items():
                         diag[k][b] = v
         aux = ExecAux(abort=abort, abort_cycle=ab_cycle, abort_stats=ab_stats,
+                      abort_stats_hi=ab_hi,
                       circ=diag["circ"], wait_dir=diag["wait_dir"],
                       wait_data=diag["wait_data"], stalled=diag["stalled"],
                       dst0=diag["dst0"])

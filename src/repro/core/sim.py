@@ -49,10 +49,12 @@ from .cache import phase1a, phase1b
 from .noc import phase2, phase3
 from .ref_serial import STAT_NAMES
 from .state import (F_DST, F_VALID, P_VALID, R_NFL, Geometry, NodeCtx,
-                    SimState, init_state, make_geometry, make_node_ctx)
+                    SimState, fold_stats, init_state, leaf_dtypes,
+                    make_geometry, make_node_ctx, narrow_state, stats_totals,
+                    widen_state)
 
 __all__ = ["cycle_step", "finished", "run", "stats_list", "ExecAux",
-           "VectorSim", "ABORT_LABELS", "diag_counts",
+           "VectorSim", "ABORT_LABELS", "diag_counts", "check_cycle_cap",
            "aggregate_stats", "network_health"]
 
 I32 = jnp.int32
@@ -78,7 +80,8 @@ class ExecAux(NamedTuple):
 
     abort: jnp.ndarray        # 0 none | 1 livelock | 2 dir saturation
     abort_cycle: jnp.ndarray
-    abort_stats: jnp.ndarray  # stats snapshot at the abort cycle
+    abort_stats: jnp.ndarray     # stats LOW-word snapshot at the abort cycle
+    abort_stats_hi: jnp.ndarray  # stats HIGH-word snapshot (base-2**30 pair)
     circ: jnp.ndarray         # circulating (in-flight) flits at abort
     wait_dir: jnp.ndarray     # nodes in WAIT_DIR at abort
     wait_data: jnp.ndarray    # nodes in WAIT_DATA at abort
@@ -115,12 +118,23 @@ class _Mon(NamedTuple):
 
 def cycle_step(s: SimState, cfg: SimConfig, geo: Geometry,
                ctx: NodeCtx) -> SimState:
-    """One simulated cycle = phases 1a, 1b, 2, 3 (S1)."""
+    """One simulated cycle = phases 1a, 1b, 2, 3 (S1).
+
+    The phases always compute in int32: under a packed storage layout
+    (``cfg.state_dtype_policy``) the state is widened on entry and
+    narrowed back on exit, so the loop carry — the persistent footprint —
+    stays narrow while phase semantics are untouched.  The cycle boundary
+    also folds the low stats word into ``stats_hi`` (base-2**30 pair), so
+    counters cannot wrap at 43k nodes x long runs."""
+    dtypes = leaf_dtypes(cfg, s.trace.shape[-1])
+    s = widen_state(s)
     s = phase1a(s, cfg, ctx)
     s = phase1b(s, cfg, ctx)
     s, arb = phase2(s, cfg, ctx)
     s = phase3(s, cfg, geo, ctx, arb)
-    return s._replace(cycle=s.cycle + 1)
+    hi, lo = fold_stats(s.stats_hi, s.stats)
+    return narrow_state(
+        s._replace(cycle=s.cycle + 1, stats=lo, stats_hi=hi), dtypes)
 
 
 def finished(s: SimState) -> jnp.ndarray:
@@ -144,9 +158,11 @@ def _mon_init(s: SimState) -> _Mon:
     zb = jnp.zeros(s.cycle.shape, I32)
     aux = ExecAux(abort=zb, abort_cycle=zb,
                   abort_stats=jnp.zeros_like(s.stats),
+                  abort_stats_hi=jnp.zeros_like(s.stats_hi),
                   circ=zb, wait_dir=zb, wait_data=zb, stalled=zb, dst0=zb)
+    # tr_ptr may be stored narrow (packed layout): widen before the sum
     return _Mon(prev_prog=s.stats[..., _PROG_IDX], frz=zb,
-                refs_anchor=jnp.sum(s.tr_ptr, axis=-1), aux=aux)
+                refs_anchor=jnp.sum(s.tr_ptr.astype(I32), axis=-1), aux=aux)
 
 
 def _mon_update(mon: _Mon, st: SimState, active: jnp.ndarray,
@@ -172,7 +188,7 @@ def _mon_update(mon: _Mon, st: SimState, active: jnp.ndarray,
         at_edge = (st.cycle % sw) == 0       # one clock: all-or-none
 
         def sat_eval(_):
-            refs = jnp.sum(st.tr_ptr, axis=-1)
+            refs = jnp.sum(st.tr_ptr.astype(I32), axis=-1)
             wd = jnp.sum((st.st == ST_WAIT_DIR).astype(I32), axis=-1)
             wdd = jnp.sum((st.st == ST_WAIT_DATA).astype(I32), axis=-1)
             fire = (active & at_edge & (st.knob_central > 0)
@@ -203,6 +219,8 @@ def _mon_update(mon: _Mon, st: SimState, active: jnp.ndarray,
                                             ABORT_LIVELOCK), aux.abort),
             abort_cycle=snap(st.cycle, aux.abort_cycle),
             abort_stats=jnp.where(fire[:, None], st.stats, aux.abort_stats),
+            abort_stats_hi=jnp.where(fire[:, None], st.stats_hi,
+                                     aux.abort_stats_hi),
             circ=snap(circ, aux.circ),
             wait_dir=snap(wd, aux.wait_dir),
             wait_data=snap(wdd, aux.wait_data),
@@ -214,10 +232,17 @@ def _mon_update(mon: _Mon, st: SimState, active: jnp.ndarray,
     return _Mon(prog, frz, refs_anchor, aux)
 
 
-@functools.partial(jax.jit, static_argnums=(1, 3))
+@functools.partial(jax.jit, static_argnums=(1, 3), donate_argnums=(0,))
 def _run_jit(s: SimState, cfg: SimConfig, max_cycles: jnp.ndarray, chunk: int):
     """Drive a state to completion in one compiled loop; returns
     ``(state, ExecAux)``.
+
+    The input state is DONATED: XLA aliases every input buffer to the
+    matching output (the loop carry updates in place instead of
+    double-buffering the full mesh), and the caller's arrays are dead
+    after the call — every caller here rebinds the result.  Use
+    :class:`VectorSim` (whose per-step jit does not donate) to keep a
+    pre-step state alive.
 
     The driver is batched (leading scenario axis); a solo state is lifted
     to a batch of one and unlifted on return, so every caller shares one
@@ -295,11 +320,12 @@ def stats_list(s: SimState, aux: ExecAux) -> List[Dict[str, int]]:
     ``cycles`` + ``finished``) — bit-identical to what a solo run always
     produced.  Aborted scenarios report the snapshot taken at the abort
     cycle plus ``aborted`` (label) and the diagnostic counters."""
-    stats = np.atleast_2d(np.asarray(s.stats))
+    stats = np.atleast_2d(stats_totals(s.stats_hi, s.stats))
     cyc = np.atleast_1d(np.asarray(s.cycle))
     fin = np.atleast_1d(np.asarray(finished(s)))
     a = {k: np.atleast_1d(np.asarray(v)) for k, v in aux._asdict().items()}
-    a["abort_stats"] = np.atleast_2d(np.asarray(aux.abort_stats))
+    a["abort_stats"] = np.atleast_2d(
+        stats_totals(aux.abort_stats_hi, aux.abort_stats))
     out = []
     for b in range(cyc.shape[0]):
         code = int(a["abort"][b])
@@ -363,6 +389,20 @@ def network_health(stats: Dict[str, int]) -> Dict[str, float]:
     }
 
 
+def check_cycle_cap(cfg: SimConfig, max_cycles: Optional[int]) -> None:
+    """Reject a per-call cycle cap above ``cfg.max_cycles`` under the
+    packed layout: the narrow dtype map (LRU clocks, flit ages) is sized
+    from the config's own cap, so overrunning it could silently wrap
+    narrow counters.  The wide layout has int32 headroom everywhere and
+    accepts any cap."""
+    if (cfg.state_dtype_policy == "packed" and max_cycles is not None
+            and max_cycles > cfg.max_cycles):
+        raise ValueError(
+            f"max_cycles={max_cycles} exceeds cfg.max_cycles="
+            f"{cfg.max_cycles}: the packed state layout sizes its narrow "
+            "dtypes from the config cap — raise cfg.max_cycles instead")
+
+
 def run(cfg: SimConfig, trace: np.ndarray, max_cycles: Optional[int] = None,
         chunk: int = 1) -> Union[Dict[str, int], List[Dict[str, int]]]:
     """Run the simulator to completion; returns statistics.
@@ -376,6 +416,7 @@ def run(cfg: SimConfig, trace: np.ndarray, max_cycles: Optional[int] = None,
             them per scenario).
         max_cycles: hard cycle cap (default ``cfg.max_cycles``).
         chunk: simulated cycles per device-loop termination check."""
+    check_cycle_cap(cfg, max_cycles)
     s = init_state(cfg, trace)
     solo = s.cycle.ndim == 0
     s, aux = _run_jit(s, cfg, jnp.asarray(max_cycles or cfg.max_cycles,
@@ -400,7 +441,7 @@ class VectorSim:
         self.state = self._step(self.state)
 
     def stats(self) -> Dict[str, int]:
-        st = np.asarray(self.state.stats)
+        st = stats_totals(self.state.stats_hi, self.state.stats)
         out = {k: int(v) for k, v in zip(STAT_NAMES, st)}
         out["cycles"] = int(self.state.cycle)
         out["finished"] = int(bool(finished(self.state)))

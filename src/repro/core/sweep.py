@@ -37,7 +37,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from .config import SimConfig
-from .sim import _run_jit, run, stats_list
+from .sim import _run_jit, check_cycle_cap, run, stats_list
 from .state import SimState, init_state
 from .workloads import stacked_traces
 
@@ -190,6 +190,7 @@ def run_sweep(spec: SweepSpec, max_cycles: Optional[int] = None,
     """
     spec.validate()
     cfg = spec.cfg
+    check_cycle_cap(cfg, max_cycles)
     traces = spec.traces()
     mig, thr, cen, eja = spec.knob_arrays()
     # pad an indivisible batch up to a multiple of the device count with

@@ -116,6 +116,22 @@ def build_parser() -> argparse.ArgumentParser:
                     help="comma list of apps for --sweep (default: --app)")
     ap.add_argument("--seeds", default=None,
                     help="comma list of seeds for --sweep (default: --seed)")
+    ap.add_argument("--state-dtype", choices=("wide", "packed"),
+                    default="wide",
+                    help="SimState storage layout: 'wide' stores every "
+                         "field as int32; 'packed' narrows each field to "
+                         "the smallest dtype its config-derived bounds "
+                         "allow (int8/int16), roughly halving resident "
+                         "state bytes with bit-identical results (compute "
+                         "still happens in int32; see docs/architecture.md)")
+    ap.add_argument("--mem-budget", default=None, metavar="BYTES",
+                    help="per-device resident-state budget for the planner "
+                         "(bytes, optional K/M/G/T suffix, e.g. '512M'; "
+                         "default: $REPRO_MEM_BUDGET or unlimited).  "
+                         "Candidate backends over budget are dropped — "
+                         "composed re-tiles toward deeper spatial splits — "
+                         "and a plan that cannot fit fails fast with the "
+                         "required bytes in the error")
     ap.add_argument("--chunk", type=int, default=8,
                     help="simulated cycles per device-loop termination check")
     ap.add_argument("--max-cycles", type=int, default=200_000,
@@ -164,7 +180,8 @@ def main(argv=None) -> None:
                     centralized_directory=args.centralized,
                     migration_enabled=not args.no_migration,
                     max_cycles=args.max_cycles,
-                    use_pallas_router=args.pallas_router, **kw)
+                    use_pallas_router=args.pallas_router,
+                    state_dtype_policy=args.state_dtype, **kw)
 
     if args.serial:
         from repro.core.ref_serial import SerialSim
@@ -203,7 +220,9 @@ def main(argv=None) -> None:
         scenarios = [engine.make_scenario(cfg, app=args.app, seed=args.seed,
                                           refs_per_core=args.refs)]
 
-    plan = engine.compile_plan(scenarios, force_backend=force)
+    plan = engine.compile_plan(
+        scenarios, force_backend=force,
+        mem_budget=engine.parse_mem_budget(args.mem_budget))
     t0 = time.time()
     per_scenario = engine.execute_plan(plan, chunk=args.chunk)
     dt = time.time() - t0
